@@ -1,0 +1,116 @@
+"""Micro-benchmarks for the FL-APU control/data plane components."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _time_us(fn, *args, n=20, warmup=2, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _tree(n_leaves=8, size=50_000, seed=0):
+    rng = np.random.default_rng(seed)
+    return {f"w{i}": rng.normal(size=(size,)).astype(np.float32)
+            for i in range(n_leaves)}
+
+
+def bench_aggregation(rows):
+    from repro.core.aggregation import coordinate_median, fedavg, trimmed_mean
+    ups = [_tree(seed=i) for i in range(4)]
+    n_floats = sum(l.size for l in jax.tree.leaves(ups[0]))
+    us = _time_us(lambda: jax.block_until_ready(fedavg(ups)), n=5)
+    rows.append(("aggregation.fedavg_4x400k", us,
+                 f"{n_floats*4/us:.0f} floats/us"))
+    us = _time_us(lambda: jax.block_until_ready(trimmed_mean(ups, trim=1)),
+                  n=5)
+    rows.append(("aggregation.trimmed_mean_4x400k", us, ""))
+    us = _time_us(lambda: jax.block_until_ready(coordinate_median(ups)), n=5)
+    rows.append(("aggregation.median_4x400k", us, ""))
+
+
+def bench_secure_masking(rows):
+    from repro.core import secure_agg
+    cohort = [f"c{i}" for i in range(4)]
+    u = _tree(n_leaves=4, size=50_000)
+    us = _time_us(secure_agg.mask_update, u, "c0", cohort, b"s", n=5)
+    rows.append(("secure_agg.mask_update_200k_4clients", us, ""))
+    masked = [secure_agg.mask_update(u, c, cohort, b"s") for c in cohort]
+    us = _time_us(secure_agg.aggregate_masked, masked, n=5)
+    rows.append(("secure_agg.aggregate_masked", us, "masks cancel"))
+
+
+def bench_communicator(rows):
+    from repro.core import crypto
+    from repro.core.serialization import pack, unpack
+    tree = _tree(n_leaves=4, size=50_000)
+    key = crypto.derive_key(b"m" * 32, "bench")
+    blob = pack(tree)
+    us_p = _time_us(pack, tree, n=10)
+    enc = crypto.encrypt(key, blob)
+    us_e = _time_us(crypto.encrypt, key, blob, n=5)
+    us_d = _time_us(crypto.decrypt, key, enc, n=5)
+    rows.append(("communicator.pack_800KB", us_p,
+                 f"{len(blob)/1e3:.0f}KB"))
+    rows.append(("communicator.encrypt", us_e,
+                 f"ratio={len(enc)/len(blob):.2f}"))
+    rows.append(("communicator.decrypt+verify", us_d, ""))
+
+
+def bench_kernels(rows):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.secure_agg.ops import secure_agg_combine
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    us = _time_us(flash_attention, q, k, v, n=3)
+    rows.append(("kernels.flash_attention_256_interpret", us,
+                 "interpret=True (CPU oracle mode)"))
+    x = jax.random.normal(ks[0], (1, 128, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 128, 4))) * 0.1
+    A = -jnp.exp(jax.random.normal(ks[2], (4,)) * 0.3)
+    B = jax.random.normal(ks[3], (1, 128, 16))
+    C = jax.random.normal(ks[4], (1, 128, 16))
+    us = _time_us(lambda: jax.block_until_ready(
+        ssd_scan(x, dt, A, B, C, chunk=32)[0]), n=3)
+    rows.append(("kernels.ssd_scan_128_interpret", us, ""))
+    qq = jax.random.randint(ks[0], (4, 65536), -127, 128).astype(jnp.int8)
+    sc = jnp.full((4,), 1e-3)
+    w = jnp.full((4,), 0.25)
+    us = _time_us(secure_agg_combine, qq, sc, w, n=3)
+    rows.append(("kernels.secure_agg_combine_4x64k", us,
+                 "fused dequant+wsum"))
+
+
+def bench_fl_round(rows):
+    """Control-plane overhead: one full FL round vs bare local training."""
+    from repro.core import Consortium, DataSchema
+    from repro.data import make_silo_datasets
+    con = Consortium(["a", "b"], seed=0)
+    schema = DataSchema(vocab=512, seq_len=32)
+    contract = con.negotiate({"arch": "fedforecast-100m", "rounds": 1,
+                              "local_steps": 1, "batch_size": 2,
+                              "data_schema": schema.to_dict()})
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(2, vocab=512, seq_len=32, seed=0)
+    t0 = time.perf_counter()
+    con.start(job, ds)
+    phase = con.run_to_completion()
+    total = time.perf_counter() - t0
+    posts = con.server.board.stats["posts"]
+    rows.append(("fl_round.e2e_1round_2silos", total * 1e6,
+                 f"phase={phase} posts={posts} "
+                 f"bytes={con.server.board.stats['bytes_posted']/1e6:.1f}MB"))

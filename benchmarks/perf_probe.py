@@ -1,0 +1,70 @@
+"""Hillclimb profiler: top collectives + traffic for a (arch x shape)
+program, optionally depth-reduced and under a variant flag.
+
+  PYTHONPATH=src:. python -m benchmarks.perf_probe --arch dbrx-132b \
+      --shape train_4k --layers 2 [--variant ssm_shard] [--cost]
+
+This is the "profile" of the dry-run world: since there is no wall-clock
+trace, the lowered HLO's collective schedule *is* the profile
+(EXPERIMENTS.md §Perf methodology).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--cost", action="store_true",
+                    help="compile in cost mode (unrolled, true counts)")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args()
+
+    if args.cost:
+        os.environ["REPRO_COST_MODE"] = "1"
+
+    from repro.configs import get_config
+    from repro.launch import dryrun, variants
+    from repro.launch.hlo_analysis import analyze_collectives
+
+    cfg = get_config(args.arch)
+    if args.layers:
+        cfg = dataclasses.replace(
+            cfg, n_layers=args.layers,
+            n_encoder_layers=args.layers if cfg.is_encoder_decoder else 0)
+    if args.variant == "baseline":
+        mesh, fn, fargs = dryrun.build_dryrun(cfg, args.shape,
+                                              multi_pod=False)
+    else:
+        mesh, fn, fargs = variants.build_variant(cfg, args.shape,
+                                                 args.variant,
+                                                 multi_pod=False)
+    with mesh:
+        compiled = fn.lower(*fargs).compile()
+    mem = compiled.memory_analysis()
+    coll = analyze_collectives(compiled.as_text(), n_devices=256)
+    agg = {}
+    for o in coll["ops"]:
+        k = (o["kind"], o["bytes"], o["group_size"])
+        agg.setdefault(k, [0, 0.0])
+        agg[k][0] += 1
+        agg[k][1] += o["traffic"]
+    print(f"== {args.arch} {args.shape} layers={args.layers or 'full'} "
+          f"variant={args.variant} cost={args.cost} ==")
+    print(f"peak/device: {(mem.argument_size_in_bytes+mem.output_size_in_bytes+mem.temp_size_in_bytes)/1e9:.2f} GB "
+          f"(temp {mem.temp_size_in_bytes/1e9:.2f})")
+    print(f"total ICI traffic/device: {coll['ici_bytes']/1e9:.2f} GB "
+          f"({coll['count']} collectives)")
+    for k, (n, t) in sorted(agg.items(), key=lambda kv: -kv[1][1])[:args.top]:
+        print(f"  {k[0]:20s} {k[1]/1e6:10.1f}MB group={k[2]:3d} "
+              f"x{n:4d} -> {t/1e9:8.2f} GB")
+
+
+if __name__ == "__main__":
+    main()

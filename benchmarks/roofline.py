@@ -1,0 +1,65 @@
+"""Roofline table builder: reads artifacts/dryrun/*.json (produced by
+``python -m repro.launch.dryrun``) and renders EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir="artifacts/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:9.2f}"
+
+
+def roofline_table(recs, mesh="pod16x16", variant="baseline") -> str:
+    rows = []
+    header = (f"| arch | shape | compute ms | memory ms | collective ms | "
+              f"dominant | model/HLO flops | peak GB/dev |")
+    sep = "|" + "---|" * 8
+    rows.append(header)
+    rows.append(sep)
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("variant") != variant:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                        f"skipped | — | — |")
+            continue
+        t = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{ratio:.2f} | "
+            f"{r['per_device']['peak_bytes']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def summarize(rows_out, out_dir="artifacts/dryrun"):
+    recs = load_records(out_dir)
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    rows_out.append(("roofline.records_ok", float(len(ok)),
+                     f"{len(skipped)} skips (documented)"))
+    for r in ok:
+        if r["mesh"] != "pod16x16" or r["variant"] != "baseline":
+            continue
+        t = r["roofline"]
+        rows_out.append((
+            f"roofline.{r['arch']}.{r['shape']}",
+            t["step_time_lower_bound_s"] * 1e6,
+            f"dom={t['dominant'].replace('_s','')}"))
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(roofline_table(recs))

@@ -1,0 +1,102 @@
+"""The paper's scenario (FederatedForecasts): competing energy providers
+federately train a short-term production forecaster without sharing data.
+
+    PYTHONPATH=src python examples/cross_silo_forecasting.py [--rounds N]
+
+Demonstrates the domain-specific pieces FL-APU adds over generic FL:
+  * governance negotiation of the *data resolution* (the paper's example:
+    "the resolution of the time series data has to be defined")
+  * data validation against the negotiated schema before training
+  * contribution measurement (compensation fairness, §III)
+  * per-silo personalization + decision-maker thresholds before deployment
+  * model monitoring on a fixed test set after deployment
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import ClientConfig, Consortium, DataSchema
+from repro.core.reporting import client_report, governance_report, run_report
+from repro.data.synthetic import ForecastSiloDataset
+
+PROVIDERS = ["nordwind-energie", "solarpark-rhein", "stadtwerke-ka"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--local-steps", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=48,
+                    help="forecast context window (hours)")
+    ap.add_argument("--full", action="store_true",
+                    help="run the full 100M forecaster (the production "
+                    "profile; several minutes per round on CPU)")
+    args = ap.parse_args()
+
+    con = Consortium(PROVIDERS, seed=7)
+
+    # --- governance: negotiate the time-series resolution + process -------
+    # (hourly resolution -> seq_len=48 means 2 days of context)
+    vocab = 4096 if args.full else 512
+    schema = DataSchema(vocab=vocab, seq_len=args.seq_len,
+                        value_ranges=(("mean_level", 0.0, float(vocab)),))
+    contract = con.negotiate({
+        "arch": "fedforecast-100m",
+        "rounds": args.rounds,
+        "local_steps": args.local_steps,
+        "batch_size": 2,
+        "lr": 1e-3,
+        "data_schema": schema.to_dict(),
+        "secure_aggregation": True,
+        "outer_optimizer": "fedavgm",
+        # --full: the 100M production forecaster (vocab 4096); default: the
+        # reduced profile so the example finishes in seconds on CPU
+        "reduced": not args.full,
+    })
+    print("== governance ==")
+    for rec in governance_report(con.server.metadata)[:6]:
+        print(f"  {rec['actor']:28s} {rec['operation']:18s}"
+              f" {rec['subject']:12s} -> {rec['outcome']}")
+    print(f"  ... contract {contract.contract_id}: "
+          f"resolution seq_len={args.seq_len}, "
+          f"rounds={args.rounds}, secure_agg=True")
+
+    # --- federated run ------------------------------------------------------
+    job = con.server.job_creator.from_contract(contract)
+    datasets = [ForecastSiloDataset(p, seq_len=args.seq_len, vocab=vocab,
+                                    seed=i, n_steps=20_000)
+                for i, p in enumerate(PROVIDERS)]
+    run_id = con.start(job, datasets,
+                       client_config=ClientConfig(deploy_threshold=12.0,
+                                                  monitor_threshold=14.0,
+                                                  personalization_steps=2))
+    phase = con.run_to_completion()
+    rep = run_report(con.server.metadata, run_id)
+    print(f"\n== run {run_id}: {phase} ==")
+    print("  loss curve:", [round(l, 4) for l in rep["loss_curve"]])
+    print("  contributions:",
+          {k: round(v, 3)
+           for k, v in rep["rounds"][-1]["contributions"]["data_size"].items()})
+
+    # --- per-provider deployment + monitoring + forecast --------------------
+    print("\n== providers ==")
+    for node, ds in zip(con.nodes, datasets):
+        node.tick()                       # one monitoring cycle
+        crep = client_report(node.metadata, node.client_id)
+        status = ("deployed" if node.deployed_params is not None
+                  else "rejected")
+        context = ds.batch(1)["tokens"][:, :args.seq_len // 2]
+        forecast = node.predict(context, n_steps=6)[0]
+        print(f"  {ds.silo_id if hasattr(ds,'silo_id') else node.client_id}: "
+              f"{status}, {len(crep['trainings'])} trainings, "
+              f"monitor={len(node.monitor_history)} evals, "
+              f"6h forecast bins={forecast.tolist()}")
+    print("\nmetadata chain intact:", con.server.metadata.verify_chain())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Governance negotiation walkthrough (paper §VII Governance).
+
+    PYTHONPATH=src python examples/governance_negotiation.py
+
+Shows the full decision lifecycle the Governance Cockpit manages:
+proposals, rejection, counter-proposal, supersession, contract versioning —
+and the provenance trail that makes every decision traceable.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.governance import GovernanceCockpit
+from repro.core.metadata import MetadataStore
+from repro.core.reporting import governance_report
+
+PARTICIPANTS = ["windco", "solarx", "gridpower"]
+
+
+def main():
+    md = MetadataStore()
+    cockpit = GovernanceCockpit(PARTICIPANTS, md)
+
+    # windco wants aggressive training; solarx rejects the learning rate
+    p_rounds = cockpit.propose("windco", "rounds", 10,
+                               rationale="more rounds -> better model")
+    p_lr = cockpit.propose("windco", "lr", 1e-2,
+                           rationale="faster convergence")
+    for u in ("solarx", "gridpower"):
+        cockpit.vote(u, p_rounds.proposal_id, True)
+    cockpit.vote("solarx", p_lr.proposal_id, False)   # too unstable
+    print(f"rounds proposal: {p_rounds.status}; lr proposal: {p_lr.status}")
+
+    # counter-proposal from solarx, informed by their model experience
+    p_lr2 = cockpit.propose("solarx", "lr", 1e-3,
+                            rationale="stable on our non-IID silo data")
+    for u in ("windco", "gridpower"):
+        cockpit.vote(u, p_lr2.proposal_id, True)
+
+    # also negotiate an explainable aggregation strategy
+    p_agg = cockpit.propose("gridpower", "aggregation", "trimmed_mean",
+                            rationale="robust to a faulty provider feed")
+    p_sec = cockpit.propose("gridpower", "secure_aggregation", False,
+                            rationale="trimmed_mean needs plaintext updates")
+    for p in (p_agg, p_sec):
+        for u in ("windco", "solarx"):
+            cockpit.vote(u, p.proposal_id, True)
+
+    contract = cockpit.finalize()
+    print(f"\ncontract v{contract.version} ({contract.contract_id}):")
+    for k in ("rounds", "lr", "aggregation", "secure_aggregation"):
+        print(f"  {k:20s} = {contract.decisions[k]}")
+
+    # a new negotiation supersedes decisions, bumping the version
+    cockpit.request_new_negotiation("windco", "expand to 2024 data")
+    p = cockpit.propose("windco", "rounds", 20)
+    for u in ("solarx", "gridpower"):
+        cockpit.vote(u, p.proposal_id, True)
+    c2 = cockpit.finalize()
+    print(f"\nrenegotiated: contract v{c2.version}, rounds={c2.decisions['rounds']}")
+
+    print(f"\nprovenance trail ({len(governance_report(md))} records, "
+          f"chain intact={md.verify_chain()}):")
+    for rec in governance_report(md):
+        print(f"  #{rec['seq']:2d} {rec['actor']:10s} "
+              f"{rec['operation']:20s} {str(rec['subject']):18s} "
+              f"-> {rec['outcome']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (load_checkpoint, save_checkpoint,
+                                   pytree_digest)  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pytree checkpointing: flat .npz payload + msgpack manifest.
+
+The manifest carries the tree structure, dtypes, a content digest, and
+caller-supplied metadata (round, silo, governance contract id) — the hooks
+the FL-APU Metadata Manager needs to track model provenance (paper §VII).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import time
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def pytree_digest(tree) -> str:
+    """SHA256 over all leaf bytes — the model identity used for tracking."""
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(tree):
+        arr = np.asarray(leaf)
+        h.update(str(arr.dtype).encode())
+        h.update(str(arr.shape).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def save_checkpoint(path: str, tree, *, metadata: Optional[dict] = None) -> dict:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    manifest = {
+        "format": "repro-ckpt-v1",
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+        "shapes": [list(np.asarray(l).shape) for l in leaves],
+        "digest": pytree_digest(tree),
+        "saved_at": time.time(),
+        "metadata": metadata or {},
+    }
+    with open(path + ".manifest", "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return manifest
+
+
+def load_checkpoint(path: str, tree_like) -> tuple:
+    """Restore into the structure of ``tree_like``. Returns (tree, manifest)."""
+    with open(path + ".manifest", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    data = np.load(path + ".npz")
+    leaves = [data[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    _, treedef = _flatten(tree_like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    # verify integrity
+    if pytree_digest(tree) != manifest["digest"]:
+        raise ValueError(f"checkpoint digest mismatch for {path}")
+    return tree, manifest

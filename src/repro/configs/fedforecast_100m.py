@@ -1,0 +1,23 @@
+"""fedforecast-100m — the paper's own scenario model (FederatedForecasts).
+
+FL-APU's use case is short-term wind/solar energy forecasting across competing
+energy providers. We model it as a ~100M decoder-only forecaster over a
+quantized time-series vocabulary (energy readings binned to 4096 symbols,
+standard practice for token-based forecasters). This is the config used by the
+end-to-end FL examples and the e2e training deliverable.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="fedforecast-100m",
+    family="dense",
+    source="FL-APU §I (FederatedForecasts scenario)",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=4096,
+    tie_embeddings=True,
+    subquadratic_decode=False,
+))

@@ -1,0 +1,23 @@
+"""FL-APU core: the paper's architecture as working components.
+
+Server containers (paper §V): GovernanceCockpit (+contracts), JobCreator,
+ClientManagement, FLServer (FL Manager/Run Manager + coordinators +
+Model Aggregator + Model Deployer), MessageBoard/ServerCommunicator,
+MetadataStore, reporting.
+
+Client containers (paper §VI): FLClientNode (FL Pipeline + Client Model
+Deployer + Inference Manager + Model Monitoring), ClientCommunicator.
+"""
+from repro.core.aggregation import AGGREGATORS, aggregate  # noqa: F401
+from repro.core.client import ClientConfig, FLClientNode  # noqa: F401
+from repro.core.clients import ClientManagement  # noqa: F401
+from repro.core.communicator import (ClientCommunicator, MessageBoard,
+                                     ServerCommunicator)  # noqa: F401
+from repro.core.governance import (DEFAULT_DECISIONS, GovernanceCockpit,
+                                   GovernanceContract)  # noqa: F401
+from repro.core.jobs import FLJob, JobCreator  # noqa: F401
+from repro.core.metadata import MetadataStore  # noqa: F401
+from repro.core.server import FLServer, ModelStore  # noqa: F401
+from repro.core.simulation import Consortium  # noqa: F401
+from repro.core.validation import (DataSchema, ValidationResult,
+                                   validate_stats)  # noqa: F401

@@ -1,0 +1,62 @@
+"""Model Aggregator strategies (paper §V; robust options per [8]).
+
+Operate on lists of client parameter pytrees (host-level control plane).
+The TPU data plane equivalent is ``repro.training.steps.fedavg_pod_params``
+(collective over the pod axis) and the fused Pallas ``secure_agg`` kernel.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _stack(updates: Sequence):
+    return jax.tree.map(lambda *xs: jnp.stack(
+        [jnp.asarray(x, jnp.float32) for x in xs]), *updates)
+
+
+def fedavg(updates: Sequence, weights: Optional[Sequence[float]] = None):
+    """Weighted mean (McMahan et al. [2]); weights default to uniform."""
+    if weights is None:
+        weights = [1.0] * len(updates)
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.sum(w)
+    stacked = _stack(updates)
+    return jax.tree.map(lambda s: jnp.tensordot(w, s, axes=(0, 0)), stacked)
+
+
+def trimmed_mean(updates: Sequence, trim: int = 1, **_):
+    """Coordinate-wise trimmed mean — robust to ``trim`` outliers per side."""
+    if 2 * trim >= len(updates):
+        raise ValueError("trim too large for cohort size")
+    stacked = _stack(updates)
+
+    def agg(s):
+        s = jnp.sort(s, axis=0)
+        return jnp.mean(s[trim:s.shape[0] - trim], axis=0)
+
+    return jax.tree.map(agg, stacked)
+
+
+def coordinate_median(updates: Sequence, **_):
+    stacked = _stack(updates)
+    return jax.tree.map(lambda s: jnp.median(s, axis=0), stacked)
+
+
+AGGREGATORS = {
+    "fedavg": fedavg,
+    "trimmed_mean": trimmed_mean,
+    "median": coordinate_median,
+}
+
+
+def aggregate(name: str, updates: Sequence,
+              weights: Optional[Sequence[float]] = None, **kw):
+    fn = AGGREGATORS[name]
+    if name == "fedavg":
+        return fn(updates, weights)
+    return fn(updates, **kw)

@@ -1,0 +1,303 @@
+"""FL Client (paper §VI): FL Pipeline, Client Model Deployer (manager,
+personalization, decision maker, inference manager, model monitoring),
+Communicator, Database Manager slice.
+
+Like the server, the client is a cooperative state machine driven by
+``tick()`` — every tick is one poll cycle against the message board. The
+client is strictly *proactive*: it fetches configuration, models and status
+and posts its own resources; nothing on the client runs because the server
+asked it to (requirement 6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import pytree_digest
+from repro.core import secure_agg
+from repro.core.communicator import ClientCommunicator
+from repro.core.jobs import FLJob
+from repro.core.metadata import MetadataStore
+from repro.core.validation import apply_preprocessing
+from repro.models import build_model
+from repro.optim import adamw, apply_updates, sgd
+from repro.training import make_train_step
+
+
+@dataclass
+class ClientConfig:
+    deploy_threshold: float = 10.0     # max acceptable eval loss (CE)
+    monitor_threshold: float = 12.0    # alert threshold for deployed model
+    personalization_steps: int = 2     # local fine-tune steps on the release
+    eval_batches: int = 2
+
+
+class FLClientNode:
+    def __init__(self, client_id: str, comm: ClientCommunicator, dataset,
+                 run_id: str, cohort: List[str], pair_secret: bytes,
+                 config: Optional[ClientConfig] = None,
+                 metadata: Optional[MetadataStore] = None):
+        self.client_id = client_id
+        self.comm = comm
+        self.dataset = dataset
+        self.run_id = run_id
+        self.cohort = sorted(cohort)
+        self.pair_secret = pair_secret
+        self.config = config or ClientConfig()
+        self.metadata = metadata or MetadataStore()   # client-local DB
+        # pipeline state
+        self.job: Optional[FLJob] = None
+        self.model = None
+        self._train_step = None
+        self._opt = None
+        self.opt_state = None
+        self.round_done = -1
+        self.hp_seen = 0
+        self.eval_done = -1
+        self.eval_hp = 0
+        self.said_hello = False
+        self.posted_stats = False
+        # deployment state
+        self.deployed_params = None
+        self.deployed_digest: Optional[str] = None
+        self.monitor_history: List[dict] = []
+        self.notifications: List[str] = []
+        self._fixed_eval_batch = None
+
+    # ------------------------------------------------------------------
+    def tick(self) -> str:
+        """One poll cycle. Returns a short description of what happened."""
+        if self.job is None:
+            job_d = self.comm.fetch(f"runs/{self.run_id}/job",
+                                    broadcast=True)
+            if job_d is None:
+                return "waiting_job"
+            self._setup_job(FLJob.from_dict(job_d))
+            return "job_fetched"
+        if not self.said_hello:
+            self.comm.post(f"runs/{self.run_id}/hello/{self.client_id}",
+                           {"client": self.client_id})
+            self.said_hello = True
+            return "hello"
+        if not self.posted_stats and self.job.data_schema is not None:
+            stats = dict(self.dataset.stats())
+            stats["n_examples"] = getattr(self.dataset, "n_examples", 10 ** 6)
+            self.comm.post(f"runs/{self.run_id}/validation/{self.client_id}",
+                           stats)
+            self.posted_stats = True
+            self.metadata.record_provenance(
+                actor=self.client_id, operation="post_data_stats",
+                subject=self.run_id, outcome="posted")
+            return "stats_posted"
+
+        status = self.comm.fetch(f"runs/{self.run_id}/status",
+                                 broadcast=True)
+        if status is None:
+            return "waiting_status"
+        phase = status["phase"]
+        if phase == "paused":
+            self._notify(f"run paused: {status.get('pause_reason')}")
+            return "paused"
+        if phase in ("collect", "distribute"):
+            return self._do_round(status)
+        if phase == "evaluate":
+            return self._do_eval(status)
+        if phase == "done":
+            return self._do_deploy()
+        return f"idle({phase})"
+
+    # ------------------------------------------------------------------
+    def _setup_job(self, job: FLJob):
+        self.job = job
+        from repro.configs import get_config
+        cfg = get_config(job.arch)
+        if job.reduced:
+            cfg = cfg.reduced()
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        # jit once per job — rounds/evals reuse the compiled executables
+        self._loss_jit = jax.jit(self.model.loss_fn)
+        self._step_cache: Dict[float, tuple] = {}
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="fetch_job", subject=job.job_id,
+            outcome="configured", details={"arch": job.arch})
+
+    def _get_step(self, lr: float):
+        if lr not in self._step_cache:
+            opt = self._make_opt(lr)
+            self._step_cache[lr] = (opt,
+                                    jax.jit(make_train_step(self.model, opt)))
+        return self._step_cache[lr]
+
+    def _make_opt(self, lr: float):
+        if self.job.optimizer == "adamw":
+            return adamw(lr, weight_decay=0.0)
+        return sgd(lr, momentum=0.9)
+
+    def _local_batch(self):
+        batch = self.dataset.batch(self.job.batch_size)
+        if self.job.preprocessing:
+            batch = apply_preprocessing(batch, self.job.preprocessing)
+        return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def _do_round(self, status) -> str:
+        rnd, hp = status["round"], status["hp_index"]
+        if self.round_done >= rnd and self.hp_seen == hp:
+            return "round_already_done"
+        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        msg = self.comm.fetch(f"{base}/global", broadcast=True)
+        if msg is None:
+            return "waiting_global"
+        params = jax.tree.map(jnp.asarray, msg["params"])
+        lr = float(status.get("lr", self.job.lr))
+        opt, train_step = self._get_step(lr)
+        opt_state = opt.init(params)
+        # --- Model Trainer: local steps on private data ----------------
+        loss = np.nan
+        for _ in range(self.job.local_steps):
+            batch = self._local_batch()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+        n_examples = self.job.local_steps * self.job.batch_size
+        out_params = jax.tree.map(np.asarray, params)
+        if self.job.secure_aggregation:
+            out_params = secure_agg.mask_update(
+                out_params, self.client_id, self.cohort, self.pair_secret)
+        self.comm.post(f"{base}/update/{self.client_id}",
+                       {"params": out_params, "n_examples": n_examples,
+                        "train_loss": loss})
+        self.round_done, self.hp_seen = rnd, hp
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="local_train",
+            subject=f"{self.run_id}/r{rnd}", outcome="update_posted",
+            details={"loss": loss, "masked": self.job.secure_aggregation})
+        return "update_posted"
+
+    def _eval_params(self, params, batches: int) -> float:
+        losses = []
+        for _ in range(batches):
+            batch = self._local_batch()
+            loss, _ = self._loss_jit(params, batch)
+            losses.append(float(loss))
+        return float(np.mean(losses))
+
+    def _do_eval(self, status) -> str:
+        rnd, hp = status["round"], status["hp_index"]
+        if self.eval_done >= rnd and self.eval_hp == hp:
+            return "eval_already_done"
+        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        # Model Evaluator: private held-out batches on the latest global
+        # (the new aggregate is distributed next round; this round's global
+        # is the model this client can evaluate without a push)
+        rel = self.comm.fetch(f"{base}/global", broadcast=True)
+        if rel is None:
+            return "waiting_global_eval"
+        params = jax.tree.map(jnp.asarray, rel["params"])
+        eval_loss = self._eval_params(params, self.config.eval_batches)
+        self.comm.post(f"{base}/eval/{self.client_id}",
+                       {"eval_loss": eval_loss})
+        self.eval_done, self.eval_hp = rnd, hp
+        return "eval_posted"
+
+    # ------------------------------------------------------------------
+    # Client Model Deployer (paper §VI)
+    # ------------------------------------------------------------------
+    def _do_deploy(self) -> str:
+        if self.deployed_digest is not None:
+            return self._monitor_deployed()
+        rel = self.comm.fetch(f"runs/{self.run_id}/release", broadcast=True)
+        blob = self.comm.fetch(f"runs/{self.run_id}/release/params",
+                               broadcast=True)
+        if rel is None or blob is None:
+            return "waiting_release"
+        params = jax.tree.map(jnp.asarray, blob["params"])
+        # --- Model Personalization -------------------------------------
+        personalized = self._personalize(params)
+        # --- Decision Maker ---------------------------------------------
+        eval_loss = self._eval_params(personalized,
+                                      self.config.eval_batches)
+        if eval_loss <= self.config.deploy_threshold:
+            self.deployed_params = personalized
+            self.deployed_digest = pytree_digest(
+                jax.tree.map(np.asarray, personalized))
+            self.metadata.record_provenance(
+                actor=self.client_id, operation="deploy_model",
+                subject=blob["digest"], outcome="deployed",
+                details={"eval_loss": eval_loss,
+                         "personalized_digest": self.deployed_digest})
+            return "deployed"
+        self._notify(
+            f"model rejected by decision maker: eval {eval_loss:.3f} > "
+            f"threshold {self.config.deploy_threshold}")
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="deploy_model",
+            subject=blob["digest"], outcome="rejected",
+            details={"eval_loss": eval_loss})
+        self.deployed_digest = "rejected"
+        return "rejected"
+
+    def _personalize(self, params):
+        if self.config.personalization_steps <= 0:
+            return params
+        if not hasattr(self, "_perso_step"):
+            opt = sgd(1e-4, momentum=0.0)
+            self._perso_step = (opt, jax.jit(make_train_step(self.model,
+                                                             opt)))
+        opt, step = self._perso_step
+        opt_state = opt.init(params)
+        for _ in range(self.config.personalization_steps):
+            params, opt_state, _ = step(params, opt_state,
+                                        self._local_batch())
+        return params
+
+    def _monitor_deployed(self) -> str:
+        """Model Monitoring: fixed test set, alert past threshold."""
+        if self.deployed_params is None:
+            return "nothing_deployed"
+        if self._fixed_eval_batch is None:
+            self._fixed_eval_batch = self._local_batch()
+        loss, _ = self._loss_jit(self.deployed_params,
+                                 self._fixed_eval_batch)
+        entry = {"eval_loss": float(loss)}
+        self.monitor_history.append(entry)
+        if float(loss) > self.config.monitor_threshold:
+            self._notify(f"deployed model degraded: {float(loss):.3f} > "
+                         f"{self.config.monitor_threshold}")
+        return "monitored"
+
+    def _notify(self, message: str):
+        """Trigger administrator notification (SAAM task 39)."""
+        self.notifications.append(message)
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="notify_admin", subject="alert",
+            outcome="raised", details={"message": message})
+
+    # ------------------------------------------------------------------
+    # Inference Manager + Model Subscription API (SAAM tasks 35/40)
+    # ------------------------------------------------------------------
+    def predict(self, tokens: np.ndarray, n_steps: int = 4) -> np.ndarray:
+        """Serve the deployed model: greedy continuation of ``tokens``."""
+        if self.deployed_params is None:
+            raise RuntimeError("no model deployed")
+        m = self.model
+        params = self.deployed_params
+        B, S = tokens.shape
+        cache_len = m.cache_len_for(S + n_steps)
+        batch = {"tokens": jnp.asarray(tokens)}
+        if not hasattr(self, "_prefill_jit"):
+            self._prefill_jit = jax.jit(m.prefill, static_argnums=2)
+            self._decode_jit = jax.jit(m.decode_step)
+        logits, cache = self._prefill_jit(params, batch, cache_len)
+        out = []
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        for i in range(n_steps):
+            out.append(np.asarray(tok)[:, 0])
+            pos = jnp.full((B, 1), S + i, jnp.int32)
+            logits, cache = self._decode_jit(params, cache, tok, pos)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.stack(out, axis=1)

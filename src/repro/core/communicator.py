@@ -1,0 +1,150 @@
+"""Communicator (paper §V/§VI) — pull-based, encrypted, compressed.
+
+Requirement 6 (§III): *"An external server is not allowed to send messages
+that start operations within the company infrastructure."* The server
+therefore never calls into clients. It publishes resources on a message
+board; clients **poll** (`fetch`) and **post** their own resources. This is
+the REST-resource pattern the paper sketches in §VIII.
+
+Every payload is msgpack-serialized, zlib-compressed, encrypted and
+authenticated with a per-client channel key (crypto.py). Client posts carry
+the device token; the board validates it against Client Management before
+accepting (paper §VII step 3-4). Server resources carry a server certificate
+clients can verify (§VII Server Authentication).
+"""
+from __future__ import annotations
+
+import fnmatch
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core import crypto, serialization
+from repro.core.clients import ClientManagement
+from repro.core.metadata import MetadataStore
+
+
+@dataclass
+class Resource:
+    path: str
+    blob: bytes                  # encrypted payload
+    author: str                  # "server" or client_id
+    created_at: float = field(default_factory=time.time)
+
+
+class MessageBoard:
+    """The shared transport substrate (in-process stand-in for the REST API).
+
+    The board itself stores only ciphertext; it can be hosted by the
+    (semi-trusted) coordinator without seeing plaintext updates.
+    """
+
+    def __init__(self, clients: ClientManagement, metadata: MetadataStore):
+        self.clients = clients
+        self.metadata = metadata
+        self._resources: Dict[str, Resource] = {}
+        self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
+                      "rejected": 0}
+
+    # server-side put (no token needed, done by the coordinator process)
+    def put_server(self, path: str, blob: bytes):
+        self._resources[path] = Resource(path, blob, "server")
+        self.stats["posts"] += 1
+        self.stats["bytes_posted"] += len(blob)
+
+    def put_client(self, client_id: str, token: str, path: str, blob: bytes):
+        if not self.clients.validate_token(client_id, token):
+            self.stats["rejected"] += 1
+            self.metadata.record_provenance(
+                actor=client_id, operation="post", subject=path,
+                outcome="rejected_auth")
+            raise PermissionError(f"invalid token for {client_id}")
+        self._resources[path] = Resource(path, blob, client_id)
+        self.stats["posts"] += 1
+        self.stats["bytes_posted"] += len(blob)
+
+    def get(self, path: str) -> Optional[bytes]:
+        self.stats["fetches"] += 1
+        r = self._resources.get(path)
+        return r.blob if r else None
+
+    def list(self, pattern: str) -> List[str]:
+        return sorted(p for p in self._resources if fnmatch.fnmatch(p, pattern))
+
+    def delete(self, path: str):
+        self._resources.pop(path, None)
+
+
+class ServerCommunicator:
+    """Communication Manager: per-client channel keys, encryption,
+    compression (paper §V)."""
+
+    def __init__(self, board: MessageBoard, master_key: bytes,
+                 server_id: str = "fl-server"):
+        self.board = board
+        self.master = master_key
+        self.server_id = server_id
+        self.cert = crypto.server_certificate(server_id, master_key)
+
+    def channel_key(self, client_id: str) -> bytes:
+        return crypto.derive_key(self.master, f"channel/{client_id}")
+
+    def broadcast_key(self) -> bytes:
+        return crypto.derive_key(self.master, "broadcast")
+
+    def publish(self, path: str, payload, *, client_id: Optional[str] = None):
+        """Publish a resource; ``client_id=None`` = broadcast channel."""
+        key = (self.channel_key(client_id) if client_id
+               else self.broadcast_key())
+        body = {"server_id": self.server_id, "cert": self.cert,
+                "payload": payload}
+        self.board.put_server(path, crypto.encrypt(key,
+                                                   serialization.pack(body)))
+
+    def collect(self, path: str, client_id: str):
+        blob = self.board.get(path)
+        if blob is None:
+            return None
+        return serialization.unpack(
+            crypto.decrypt(self.channel_key(client_id), blob))
+
+
+class ClientCommunicator:
+    """Client-side Communicator: polls the board, never receives pushes."""
+
+    def __init__(self, board: MessageBoard, client_id: str, token: str,
+                 channel_key: bytes, broadcast_key: bytes,
+                 ca_key: Optional[bytes] = None):
+        self.board = board
+        self.client_id = client_id
+        self.token = token
+        self.channel_key = channel_key
+        self.broadcast_key = broadcast_key
+        self.ca_key = ca_key
+
+    def fetch(self, path: str, *, broadcast: bool = False):
+        blob = self.board.get(path)
+        if blob is None:
+            return None
+        key = self.broadcast_key if broadcast else self.channel_key
+        body = serialization.unpack(crypto.decrypt(key, blob))
+        # server authentication (§VII): verify certificate before trusting
+        if self.ca_key is not None:
+            if not crypto.verify_certificate(body["server_id"], body["cert"],
+                                             self.ca_key):
+                raise ValueError("server certificate verification failed")
+        return body["payload"]
+
+    def poll(self, path: str, *, broadcast: bool = False, timeout: float = 0.0,
+             interval: float = 0.01):
+        """Pull-based wait for a resource to appear."""
+        deadline = time.time() + timeout
+        while True:
+            got = self.fetch(path, broadcast=broadcast)
+            if got is not None or time.time() >= deadline:
+                return got
+            time.sleep(interval)
+
+    def post(self, path: str, payload):
+        blob = crypto.encrypt(self.channel_key, serialization.pack(payload))
+        self.board.put_client(self.client_id, self.token, path, blob)

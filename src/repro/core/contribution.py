@@ -1,0 +1,59 @@
+"""Client contribution measurement (paper §V Evaluation Coordinator:
+"responsible for measuring the client contribution" — compensation fairness
+is a §III requirement).
+
+Three measures, cheapest to priciest:
+  * data_size   — examples contributed (FedAvg weighting baseline)
+  * update_norm — gradient-energy proxy
+  * loo_eval    — leave-one-out: marginal effect of each client's update on
+                  the cohort-mean eval loss (gold standard, needs an eval fn)
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.aggregation import fedavg
+
+
+def data_size_contribution(sizes: Dict[str, int]) -> Dict[str, float]:
+    total = sum(sizes.values()) or 1
+    return {cid: s / total for cid, s in sizes.items()}
+
+
+def update_norm_contribution(updates: Dict[str, dict],
+                             base) -> Dict[str, float]:
+    norms = {}
+    for cid, upd in updates.items():
+        sq = 0.0
+        for u, b in zip(jax.tree.leaves(upd), jax.tree.leaves(base)):
+            d = np.asarray(u, np.float64) - np.asarray(b, np.float64)
+            sq += float((d * d).sum())
+        norms[cid] = sq ** 0.5
+    total = sum(norms.values()) or 1.0
+    return {cid: n / total for cid, n in norms.items()}
+
+
+def leave_one_out_contribution(updates: Dict[str, dict],
+                               eval_fn: Callable[[dict], float]
+                               ) -> Dict[str, float]:
+    """contribution_i = loss(without i) - loss(with all); positive = helpful."""
+    cids = sorted(updates)
+    full = fedavg([updates[c] for c in cids])
+    full_loss = eval_fn(full)
+    out = {}
+    for cid in cids:
+        rest = [updates[c] for c in cids if c != cid]
+        if not rest:
+            out[cid] = 0.0
+            continue
+        loo_loss = eval_fn(fedavg(rest))
+        out[cid] = float(loo_loss - full_loss)
+    return out
+
+
+CONTRIBUTION_MEASURES = ("data_size", "update_norm", "loo_eval")

@@ -1,0 +1,99 @@
+"""Job Creator (paper §V): governance contract (or admin input) -> FL Job.
+
+An FL Job carries *all* parameters for one FL process: model architecture,
+rounds, local training config, train/test split, evaluation metrics,
+preprocessing ops, the negotiated data schema, aggregation strategy, and
+(optionally) a hyperparameter sweep the FL Run Manager repeats rounds for.
+"""
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.governance import GovernanceContract
+from repro.core.metadata import MetadataStore
+from repro.core.validation import DataSchema
+
+
+@dataclass
+class FLJob:
+    job_id: str
+    arch: str
+    rounds: int
+    local_steps: int
+    batch_size: int
+    lr: float
+    optimizer: str
+    outer_optimizer: str
+    aggregation: str
+    train_test_split: float
+    eval_metrics: List[str]
+    secure_aggregation: bool
+    data_schema: Optional[dict]
+    preprocessing: List[dict] = field(default_factory=list)
+    hyperparameter_search: Optional[dict] = None
+    contract_id: Optional[str] = None
+    created_by: str = "admin"
+    reduced: bool = True        # CPU-scale model variant for the container
+
+    def to_dict(self) -> dict:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+    @staticmethod
+    def from_dict(d: dict) -> "FLJob":
+        return FLJob(**{k: d[k] for k in FLJob.__dataclass_fields__
+                        if k in d})
+
+
+class JobCreator:
+    def __init__(self, metadata: MetadataStore):
+        self.metadata = metadata
+
+    def from_contract(self, contract: GovernanceContract,
+                      **overrides) -> FLJob:
+        d = dict(contract.decisions)
+        d.update(overrides)
+        job = self._build(d, contract_id=contract.contract_id,
+                          created_by="governance")
+        self.metadata.record_provenance(
+            actor="job_creator", operation="create_job_from_contract",
+            subject=job.job_id, outcome="created",
+            details={"contract": contract.contract_id, "arch": job.arch})
+        return job
+
+    def from_admin(self, admin: str, decisions: dict) -> FLJob:
+        """SAAM task 7: the FL Server Administrator creates a (test) job."""
+        from repro.core.governance import DEFAULT_DECISIONS
+        d = dict(DEFAULT_DECISIONS)
+        d.update(decisions)
+        job = self._build(d, created_by=admin)
+        self.metadata.record_provenance(
+            actor=admin, operation="create_job_manual", subject=job.job_id,
+            outcome="created", details={"arch": job.arch})
+        return job
+
+    def _build(self, d: dict, contract_id=None, created_by="admin") -> FLJob:
+        schema = d.get("data_schema")
+        if isinstance(schema, DataSchema):
+            schema = schema.to_dict()
+        return FLJob(
+            job_id=f"job-{uuid.uuid4().hex[:8]}",
+            arch=d["arch"],
+            rounds=int(d["rounds"]),
+            local_steps=int(d["local_steps"]),
+            batch_size=int(d["batch_size"]),
+            lr=float(d["lr"]),
+            optimizer=d["optimizer"],
+            outer_optimizer=d.get("outer_optimizer", "fedavg"),
+            aggregation=d.get("aggregation", "fedavg"),
+            train_test_split=float(d.get("train_test_split", 0.9)),
+            eval_metrics=list(d.get("eval_metrics", ["ce"])),
+            secure_aggregation=bool(d.get("secure_aggregation", True)),
+            data_schema=schema,
+            preprocessing=list(d.get("preprocessing", [])),
+            hyperparameter_search=d.get("hyperparameter_search"),
+            contract_id=contract_id,
+            created_by=created_by,
+            reduced=bool(d.get("reduced", True)),
+        )

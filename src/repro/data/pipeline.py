@@ -1,0 +1,29 @@
+"""Host->device batch placement for the production mesh."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def batch_pspec(mesh, batch_like) -> dict:
+    """Shard the batch dim over all data-parallel axes present in the mesh."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(x):
+        bdim = x.shape[0]
+        total = 1
+        for a in dp:
+            total *= mesh.shape[a]
+        first = dp if (dp and bdim % total == 0) else None
+        return P(first, *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(spec, batch_like)
+
+
+def shard_batch(mesh, batch):
+    specs = batch_pspec(mesh, batch)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(jnp.asarray(x), NamedSharding(mesh, s)),
+        batch, specs)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships three modules:
+  kernel.py — ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+  ops.py    — jit'd public wrapper (layout handling, defaults, interpret flag)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels target TPU (MXU-aligned 128-multiples, VMEM working sets); on this
+CPU container they are validated with ``interpret=True``.
+"""
+INTERPRET = True  # flipped to False on real TPU deployments

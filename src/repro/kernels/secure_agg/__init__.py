@@ -1,0 +1,1 @@
+from repro.kernels.secure_agg.ops import secure_agg_combine  # noqa: F401

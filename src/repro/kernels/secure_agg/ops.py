@@ -1,0 +1,50 @@
+"""Public secure-agg combine: quantize a pytree of client updates and fuse
+the dequant+weighted-sum on TPU. Also exposes the pytree-level helper used
+by the launch-layer FedAvg variant."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels
+from repro.kernels.secure_agg import kernel as _k
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def secure_agg_combine(q, scales, weights, *, interpret: bool = None):
+    """q: (N, T) int8; scales, weights: (N,) f32 -> (T,) f32."""
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    return _k.secure_agg_combine_flat(q, scales, weights,
+                                      interpret=interpret)
+
+
+def quantize_update(update_flat: jnp.ndarray):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    scale = jnp.max(jnp.abs(update_flat)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(update_flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def combine_pytrees(updates, weights, *, interpret: bool = None):
+    """Aggregate a list of pytrees through the fused kernel."""
+    flats = []
+    for u in updates:
+        leaves = jax.tree.leaves(u)
+        flats.append(jnp.concatenate(
+            [jnp.ravel(l).astype(jnp.float32) for l in leaves]))
+    qs, scales = zip(*[quantize_update(f) for f in flats])
+    q = jnp.stack(qs)
+    out = secure_agg_combine(q, jnp.stack(scales),
+                             jnp.asarray(weights, jnp.float32),
+                             interpret=interpret)
+    # unflatten back into the first update's structure
+    leaves, treedef = jax.tree_util.tree_flatten(updates[0])
+    res, off = [], 0
+    for l in leaves:
+        n = l.size
+        res.append(out[off:off + n].reshape(l.shape))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, res)

@@ -1,0 +1,16 @@
+"""Oracle for the fused secure-aggregation combine.
+
+combine(q, scales, weights) = sum_i weights_i * (q_i * scales_i)
+
+q: (n_clients, T) int8 — per-client quantized (masked) updates
+scales: (n_clients,) f32 — per-client symmetric dequant scales
+weights: (n_clients,) f32 — FedAvg weights (sum to 1)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def secure_agg_ref(q, scales, weights):
+    deq = q.astype(jnp.float32) * scales[:, None]
+    return jnp.tensordot(weights.astype(jnp.float32), deq, axes=(0, 0))

@@ -1,0 +1,105 @@
+"""Chunked SSD scan as a Pallas TPU kernel.
+
+Grid: (batch, n_chunks) — the chunk axis is minormost and runs sequentially
+on TPU, so the inter-chunk state lives in a VMEM scratch buffer that carries
+from one chunk program to the next (the same trick the TPU flash-attention
+kernel uses for its softmax state).
+
+Per program, VMEM holds one chunk of head inputs (Q, H, P), the B/C
+projections (Q, N), the running state (H, N, P) scratch, and the (Q, Q)
+intra-chunk attention matrix — all 128-aligned for Q=chunk=128, P=64,
+N=128 (mamba2-780m's shapes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                h_scr):
+    """Blocks: x (Q,H,P), dt (Q,H), a (H,), b/c (Q,N);
+    outs y (Q,H,P), state (H,P,N); scratch h (H,N,P) f32."""
+    ci = pl.program_id(1)
+    f32 = jnp.float32
+    Q, H, P = x_ref.shape
+    N = b_ref.shape[-1]
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[...].astype(f32)
+    dt = dt_ref[...].astype(f32)
+    A = a_ref[...].astype(f32)
+    Bm = b_ref[...].astype(f32)
+    Cm = c_ref[...].astype(f32)
+
+    dlog = dt * A[None, :]                                # (Q,H)
+    L = jnp.cumsum(dlog, axis=0)                          # (Q,H)
+    xb = x * dt[..., None]                                # dt-weighted input
+
+    # intra-chunk quadratic form
+    cb = jnp.dot(Cm, Bm.T, preferred_element_type=f32)    # (Q,Q)
+    decay = jnp.exp(L[:, None, :] - L[None, :, :])        # (t,s,H)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    att = cb[:, :, None] * jnp.where(tri[:, :, None], decay, 0.0)
+    y_intra = jnp.einsum("tsh,shp->thp", att, xb)
+
+    # inter-chunk contribution from carried state
+    h_prev = h_scr[...]                                   # (H,N,P)
+    y_inter = jnp.exp(L)[:, :, None] * jnp.einsum(
+        "tn,hnp->thp", Cm, h_prev)
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h = exp(L_last) h + sum_s exp(L_last - L_s) B_s xb_s
+    last = L[-1:, :]                                      # (1,H)
+    w = jnp.exp(last - L)                                 # (Q,H)
+    delta = jnp.einsum("sn,sh,shp->hnp", Bm, w, xb)
+    h_scr[...] = h_prev * jnp.exp(last)[0][:, None, None] + delta
+
+    # emit final state on the last chunk
+    nc = pl.num_programs(1)
+    @pl.when(ci == nc - 1)
+    def _emit():
+        state_ref[...] = h_scr[...].swapaxes(-1, -2)      # (H,P,N)
+
+
+def ssd_scan_chunked(x, dt, A, B, C, *, chunk: int, interpret: bool = True):
+    """x: (b,S,H,P); dt: (b,S,H); A: (H,); B,C: (b,S,N).
+
+    Returns (y (b,S,H,P) f32, final_state (b,H,P,N) f32).
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    y, state = pl.pallas_call(
+        _ssd_kernel,
+        grid=(b, nc),
+        in_specs=[
+            pl.BlockSpec((None, Q, H, P), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((None, Q, H), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((H,), lambda i, c: (0,)),
+            pl.BlockSpec((None, Q, N), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((None, Q, N), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, Q, H, P), lambda i, c: (i, c, 0, 0)),
+            pl.BlockSpec((None, H, P, N), lambda i, c: (i, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((H, N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, B, C)
+    return y, state

@@ -1,0 +1,38 @@
+"""Sequential-recurrence oracle for the Mamba2 SSD scan.
+
+The ground truth everything else (chunked jnp path in models/ssm.py and the
+Pallas kernel) is validated against:
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t (x_t)^T
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (b,S,H,P); dt: (b,S,H); A: (H,); B,C: (b,S,N).
+
+    Returns y (b,S,H,P) f32 and final state (b,H,P,N) f32.
+    """
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    f32 = jnp.float32
+    x, dt, B, C = (t.astype(f32) for t in (x, dt, B, C))
+    A = A.astype(f32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                        # (b,H,P),(b,H),(b,N)
+        dA = jnp.exp(dtt * A)                        # (b,H)
+        h = (h * dA[..., None, None]
+             + jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, Bt))
+        y = jnp.einsum("bhpn,bn->bhp", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((b, H, P, N), f32)
+    hT, ys = jax.lax.scan(step, h0,
+                          (x.swapaxes(0, 1), dt.swapaxes(0, 1),
+                           B.swapaxes(0, 1), C.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1), hT

@@ -1,0 +1,413 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh and extract the roofline terms.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init (that is why this module, and only this module, forces
+512 host devices).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k
+  python -m repro.launch.dryrun --all                 # full 40-pair baseline
+  python -m repro.launch.dryrun --all --multi-pod     # 2-pod mesh pass
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>[__variant].json.
+"""
+
+import argparse
+import json
+import time
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, get_config, get_shape,
+                           shape_applicable, SHAPES)
+from repro.launch.hlo_analysis import analyze_collectives, roofline_terms
+from repro.launch.mesh import V5E, make_production_mesh
+from repro.launch.roofline_model import traffic_bytes
+from repro.models import build_model
+from repro.optim import adamw
+from repro.sharding import cache_pspecs, param_pspecs
+from repro.training import fedavg_pod_params, make_train_step
+
+N_PODS = 2
+
+
+def _shd(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _stack_specs(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def _prefix_pod(pspec_tree):
+    return jax.tree.map(lambda s: P("pod", *tuple(s)), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_dryrun(arch, shape_name: str, *, multi_pod: bool,
+                 variant: str = "baseline"):
+    """Returns (jitted_fn, abstract_args) ready to .lower(*args).
+
+    ``arch`` is a registry name or a ModelConfig (used by the cost pass to
+    lower depth-reduced variants)."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg, impl="xla")
+    a_params = model.abstract_params()
+    p_specs = param_pspecs(a_params, mesh)
+
+    if shape.mode == "train":
+        opt = adamw(1e-4)
+        a_opt = jax.eval_shape(opt.init, a_params)
+        o_specs = param_pspecs(a_opt, mesh)
+        a_batch = model.input_specs(shape)
+        step = make_train_step(model, opt)
+        if multi_pod:
+            from repro.training import make_multipod_train_step
+            step = make_multipod_train_step(model, opt, N_PODS)
+            a_params = _stack_specs(a_params, N_PODS)
+            a_opt = _stack_specs(a_opt, N_PODS)
+            a_batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (N_PODS, s.shape[0] // N_PODS) + s.shape[1:], s.dtype),
+                a_batch)
+            p_specs = _prefix_pod(p_specs)
+            o_specs = _prefix_pod(o_specs)
+            b_specs = jax.tree.map(
+                lambda s: P("pod", "data", *([None] * (len(s.shape) - 2))),
+                a_batch)
+        else:
+            b_specs = jax.tree.map(
+                lambda s: P("data", *([None] * (len(s.shape) - 1))),
+                a_batch)
+        fn = jax.jit(step,
+                     in_shardings=(_shd(mesh, p_specs),
+                                   _shd(mesh, o_specs),
+                                   _shd(mesh, b_specs)),
+                     out_shardings=(_shd(mesh, p_specs),
+                                    _shd(mesh, o_specs), None),
+                     donate_argnums=(0, 1))
+        return mesh, fn, (a_params, a_opt, a_batch)
+
+    # serving paths: bf16 weights (fp32 masters live with the trainer) and
+    # TP-only sharding (FSDP gathers per decode step are a serving bug)
+    def _serve_params():
+        ap = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+            model.abstract_params())
+        return ap, param_pspecs(ap, mesh, mode="serve")
+
+    if shape.mode == "prefill":
+        a_params, p_specs = _serve_params()
+        cache_len = model.cache_len_for(shape.seq_len)
+        a_batch = model.input_specs(shape)
+        inner = partial(model.prefill, cache_len=cache_len)
+        # cache specs derived on the single-pod shapes, then pod-prefixed
+        a_cache_1p = jax.eval_shape(
+            inner, a_params,
+            jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0] // (N_PODS if multi_pod else 1),) + s.shape[1:],
+                s.dtype), a_batch))[1]
+        c_specs = cache_pspecs(
+            a_cache_1p, mesh,
+            batch=shape.global_batch // (N_PODS if multi_pod else 1))
+        fn_inner = inner
+        if multi_pod:
+            fn_inner = jax.vmap(inner, spmd_axis_name="pod")
+            a_params = _stack_specs(a_params, N_PODS)
+            a_batch = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(
+                    (N_PODS, s.shape[0] // N_PODS) + s.shape[1:], s.dtype),
+                a_batch)
+            p_specs = _prefix_pod(p_specs)
+            c_specs = _prefix_pod(c_specs)
+            b_specs = jax.tree.map(
+                lambda s: P("pod", "data", *([None] * (len(s.shape) - 2))),
+                a_batch)
+        else:
+            b_specs = jax.tree.map(
+                lambda s: P("data", *([None] * (len(s.shape) - 1))),
+                a_batch)
+        fn = jax.jit(fn_inner,
+                     in_shardings=(_shd(mesh, p_specs),
+                                   _shd(mesh, b_specs)),
+                     out_shardings=(None, _shd(mesh, c_specs)))
+        return mesh, fn, (a_params, a_batch)
+
+    # decode: serve_step — ONE new token against a seq_len cache
+    a_params, p_specs = _serve_params()
+    specs = model.input_specs(shape)     # {"cache", "token", "pos"}
+    a_cache, a_token, a_pos = specs["cache"], specs["token"], specs["pos"]
+    B = shape.global_batch
+    c_specs = cache_pspecs(a_cache, mesh, batch=B)
+    step = model.decode_step
+    if multi_pod:
+        # each pod serves an independent replica stream of B requests
+        step = jax.vmap(model.decode_step, in_axes=(0, 0, 0, 0),
+                        spmd_axis_name="pod")
+        a_params = _stack_specs(a_params, N_PODS)
+        a_cache = _stack_specs(a_cache, N_PODS)
+        a_token = _stack_specs(a_token, N_PODS)
+        a_pos = _stack_specs(a_pos, N_PODS)
+        p_specs = _prefix_pod(p_specs)
+        c_specs = _prefix_pod(c_specs)
+        t_spec = P("pod", "data" if B % mesh.shape["data"] == 0 else None,
+                   None)
+    else:
+        t_spec = P("data" if B % mesh.shape["data"] == 0 else None, None)
+    fn = jax.jit(step,
+                 in_shardings=(_shd(mesh, p_specs),
+                               _shd(mesh, c_specs),
+                               NamedSharding(mesh, t_spec),
+                               NamedSharding(mesh, t_spec)),
+                 out_shardings=(None, _shd(mesh, c_specs)),
+                 donate_argnums=(1,))
+    return mesh, fn, (a_params, a_cache, a_token, a_pos)
+
+
+def _cost_compile(cfg, shape_name, variant, n_dev, pod_size):
+    os.environ["REPRO_COST_MODE"] = "1"
+    try:
+        if variant == "baseline":
+            mesh, fn, args = build_dryrun(cfg, shape_name, multi_pod=False)
+        else:
+            from repro.launch import variants
+            mesh, fn, args = variants.build_variant(cfg, shape_name, variant,
+                                                    multi_pod=False)
+        with mesh:
+            compiled = fn.lower(*args).compile()
+        cost = compiled.cost_analysis() or {}
+        coll = analyze_collectives(compiled.as_text(), n_devices=n_dev,
+                                   pod_size=pod_size)
+        return cost, coll
+    finally:
+        os.environ.pop("REPRO_COST_MODE", None)
+
+
+def _scale_coll(c1, c2, f):
+    """Linear depth extrapolation of the collective summary."""
+    out = {"ops": [],
+           "bytes_by_kind": {}, "count": 0.0, "ici_bytes": 0.0,
+           "dcn_bytes": 0.0}
+    kinds = set(c1["bytes_by_kind"]) | set(c2["bytes_by_kind"])
+    for k in kinds:
+        a, b = c1["bytes_by_kind"].get(k, 0.0), c2["bytes_by_kind"].get(k, 0.0)
+        out["bytes_by_kind"][k] = a + f * (b - a)
+    for field in ("count", "ici_bytes", "dcn_bytes"):
+        out[field] = c1[field] + f * (c2[field] - c1[field])
+    return out
+
+
+def _cost_pass(cfg, shape_name, variant, n_dev, pod_size):
+    """Trip-count-faithful FLOPs/collectives via depth extrapolation.
+
+    Cost-mode compiles unroll the layer scan, which is exact but compiles
+    in O(n_layers) time; we compile two depth-reduced variants (L1, L2 = one
+    and two local/global periods' worth of layers) and extrapolate linearly
+    to the real depth — exact for depth-homogeneous stacks, off by at most
+    one layer's local/global mix for non-divisible patterns (gemma3).
+    """
+    import dataclasses
+    period = max(cfg.local_global_period, 1) * 2
+    L1 = min(cfg.n_layers, period)
+    L2 = min(cfg.n_layers, 2 * period)
+    enc = cfg.is_encoder_decoder
+
+    def reduced(L):
+        return dataclasses.replace(
+            cfg, n_layers=L, n_encoder_layers=L if enc else 0)
+
+    if L2 == cfg.n_layers or L1 == L2:
+        return _cost_compile(cfg, shape_name, variant, n_dev, pod_size)
+    cost1, coll1 = _cost_compile(reduced(L1), shape_name, variant, n_dev,
+                                 pod_size)
+    cost2, coll2 = _cost_compile(reduced(L2), shape_name, variant, n_dev,
+                                 pod_size)
+    f = (cfg.n_layers - L1) / (L2 - L1)
+    cost = {k: cost1.get(k, 0.0) + f * (cost2.get(k, 0.0) - cost1.get(k, 0.0))
+            for k in set(cost1) | set(cost2)
+            if isinstance(cost1.get(k, 0.0), (int, float))}
+    coll = _scale_coll(coll1, coll2, f)
+    return cost, coll
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) useful-compute yardstick."""
+    model = build_model(cfg)
+    a_params = model.abstract_params()
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(a_params))
+    if cfg.moe is not None:
+        per_expert = cfg.d_model * cfg.moe.d_expert * 3
+        inactive = (cfg.moe.num_experts - cfg.moe.top_k) * per_expert \
+            * cfg.n_layers
+        n_active = n_params - inactive
+    else:
+        n_active = n_params
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_active * tokens, n_params
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool,
+            variant: str = "baseline", out_dir: str = "artifacts/dryrun",
+            verbose: bool = True, run_cost_pass: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (
+        "" if variant == "baseline" else f"__{variant}")
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "variant": variant, "status": "skipped", "reason": reason}
+        _save(out_dir, tag, rec)
+        if verbose:
+            print(f"[skip] {tag}: {reason}")
+        return rec
+
+    def _build():
+        if variant == "baseline":
+            return build_dryrun(arch, shape_name, multi_pod=multi_pod)
+        from repro.launch import variants
+        return variants.build_variant(arch, shape_name, variant,
+                                      multi_pod=multi_pod)
+
+    # ---- pass 1: rolled scans — lowering proof + memory analysis --------
+    t0 = time.time()
+    mesh, fn, args = _build()
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    rolled_cost = compiled.cost_analysis() or {}
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    pod_size = 256 if multi_pod else None
+    rolled_coll = analyze_collectives(compiled.as_text(), n_devices=n_dev,
+                                      pod_size=pod_size)
+    del compiled
+
+    # ---- pass 2: cost mode — trip-count-faithful flops + collectives ----
+    # (single-pod roofline only; multi-pod pass proves lowering/sharding)
+    cost = dict(rolled_cost)
+    coll = rolled_coll
+    cost_compile_s = None
+    if run_cost_pass and not multi_pod:
+        t1 = time.time()
+        cost, coll = _cost_pass(cfg, shape_name, variant, n_dev, pod_size)
+        cost_compile_s = time.time() - t1
+
+    flops = float(cost.get("flops", 0.0))
+    model = build_model(cfg)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    traffic = traffic_bytes(model, shape, n_devices=n_dev, dp=dp,
+                            tp=mesh.shape.get("model", 1))
+    terms = roofline_terms(flops, traffic["total"], coll, V5E, n_chips=n_dev)
+    mf, n_params = model_flops_estimate(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant, "status": "ok",
+        "n_devices": n_dev,
+        "compile_s": round(compile_s, 2),
+        "cost_compile_s": (round(cost_compile_s, 2)
+                           if cost_compile_s else None),
+        "n_params": int(n_params),
+        "per_device": {
+            "flops": flops,
+            "hbm_traffic_bytes": traffic["total"],
+            "hbm_traffic_detail": traffic["detail"],
+            "xla_bytes_accessed_rolled": float(
+                rolled_cost.get("bytes accessed", 0.0)),
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           + mem.temp_size_in_bytes
+                           - mem.alias_size_in_bytes),
+        },
+        "collectives": {
+            "count": coll["count"],
+            "bytes_by_kind": coll["bytes_by_kind"],
+            "ici_bytes": coll["ici_bytes"],
+            "dcn_bytes": coll["dcn_bytes"],
+            "rolled_count": rolled_coll["count"],
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / (flops * n_dev)) if flops else None,
+    }
+    _save(out_dir, tag, rec)
+    if verbose:
+        print(f"[ok] {tag}: compile={compile_s:.1f}s"
+              f"+{cost_compile_s or 0:.0f}s "
+              f"dominant={terms['dominant']} "
+              f"compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"coll={terms['collective_s']*1e3:.2f}ms "
+              f"peakHBM={rec['per_device']['peak_bytes']/1e9:.2f}GB")
+    return rec
+
+
+def _save(out_dir, tag, rec):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the cost-mode pass (lowering proof only)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip pairs whose artifact JSON already exists")
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        for a in ASSIGNED_ARCHS:
+            for s in SHAPES:
+                pairs.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        pairs = [(args.arch, args.shape)]
+    failures = []
+    for a, s in pairs:
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        tag = f"{a}__{s}__{mesh_name}" + (
+            "" if args.variant == "baseline" else f"__{args.variant}")
+        if args.skip_existing and os.path.exists(
+                os.path.join(args.out, tag + ".json")):
+            print(f"[skip-existing] {tag}")
+            continue
+        try:
+            run_one(a, s, multi_pod=args.multi_pod, variant=args.variant,
+                    out_dir=args.out, run_cost_pass=not args.no_cost)
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            failures.append((a, s, repr(e)))
+            print(f"[FAIL] {a} {s}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production meshes + TPU v5e hardware model.
+
+Importing this module never touches jax device state — meshes are built
+inside functions only (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 2, model: int = 4, *, pod: int = 0):
+    """Small mesh over host devices for tests (needs XLA_FLAGS set)."""
+    import jax
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@dataclass(frozen=True)
+class HardwareModel:
+    """TPU v5e constants used for the roofline terms."""
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12       # per chip
+    hbm_bw: float = 819e9                 # bytes/s per chip
+    ici_bw: float = 50e9                  # bytes/s per link (intra-pod)
+    dcn_bw: float = 12.5e9                # bytes/s per chip (cross-pod,
+                                          # assumption documented in
+                                          # EXPERIMENTS.md §Roofline)
+    hbm_per_chip: float = 16e9            # bytes
+
+
+V5E = HardwareModel()

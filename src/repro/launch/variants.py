@@ -1,0 +1,127 @@
+"""Perf-iteration variants for the §Perf hillclimb (EXPERIMENTS.md).
+
+Each variant is a named, lowering-compatible alternative build of a
+(arch x shape) program. ``run_one(..., variant=...)`` produces the same
+roofline artifact as the baseline so before/after deltas are directly comparable.
+
+Variants:
+  seqpar       — sequence parallelism: residual-stream activations sharded
+                 (batch:data, seq:model) between blocks; Megatron-SP turns
+                 per-layer activation all-reduces into reduce-scatter +
+                 all-gather pairs (~2x less TP traffic).
+  tree_decode  — batch-1 long-context decode with the KV/latent cache
+                 sharded on the *sequence* dim over "data" and partial-
+                 softmax combination (flash-decode); removes the cache
+                 all-gather.
+  moe_a2a      — MoE dispatch through shard_map ragged all-to-all instead
+                 of gather/scatter einsums (expert parallelism).
+  fedavg_sync  — paper-faithful Model Aggregator: full-precision psum of
+                 silo params over the "pod" axis (multi-pod only).
+  fedavg_q8    — beyond-paper aggregator: int8-quantized delta psum
+                 (4x less DCN traffic; matches the secure_agg kernel path).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.sharding import param_pspecs
+from repro.training import fedavg_pod_params, make_fedavg_pod_step
+
+N_PODS = 2
+
+_ENV_VARIANTS = {
+    # variant -> (env flag consumed at trace time, value)
+    "seqpar": ("REPRO_SEQ_SHARD", "1"),
+    "tree_decode": ("REPRO_TREE_DECODE", "1"),
+    "moe_grouped": ("REPRO_MOE_GROUPED", "16"),
+    "ssm_shard": ("REPRO_SSM_SHARD", "1"),
+}
+
+
+class _EnvLower:
+    """Defers an env flag to .lower() time (jit traces lazily)."""
+
+    def __init__(self, fn, env: str, value: str):
+        self._fn, self._env, self._value = fn, env, value
+
+    def lower(self, *args, **kw):
+        os.environ[self._env] = self._value
+        try:
+            return self._fn.lower(*args, **kw)
+        finally:
+            os.environ.pop(self._env, None)
+
+
+def build_variant(arch, shape_name: str, variant: str, *, multi_pod: bool):
+    from repro.launch import dryrun
+
+    if variant in _ENV_VARIANTS:
+        env, value = _ENV_VARIANTS[variant]
+        # jit tracing is lazy: the flag must be live at .lower() time, not
+        # at build time — wrap the jitted fn so lower() sets/clears it
+        mesh, fn, args = dryrun.build_dryrun(arch, shape_name,
+                                             multi_pod=multi_pod)
+        return mesh, _EnvLower(fn, env, value), args
+
+    if variant in ("fedavg_sync", "fedavg_q8"):
+        return _build_fedavg(arch, quantize=(variant == "fedavg_q8"))
+
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def _build_fedavg(arch, *, quantize: bool):
+    """Lower the cross-pod Model Aggregator itself (always multi-pod).
+
+    The quantized variant uses shard_map with an *explicit*
+    ``all_gather(int8, "pod")`` — a sharding-constraint formulation lets
+    XLA hoist the dequant ahead of the collective and exchange f32 anyway
+    (measured: identical DCN traffic; EXPERIMENTS §Perf iteration 6a).
+    """
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    mesh = make_production_mesh(multi_pod=True)
+    model = build_model(cfg)
+    a_params = model.abstract_params()
+    a_stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((N_PODS,) + s.shape, s.dtype),
+        a_params)
+    p_specs = jax.tree.map(lambda s: P("pod", *tuple(s)),
+                           param_pspecs(a_params, mesh),
+                           is_leaf=lambda x: isinstance(x, P))
+    shd = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                       is_leaf=lambda x: isinstance(x, P))
+    if not quantize:
+        step = fedavg_pod_params
+    else:
+        from jax.experimental.shard_map import shard_map
+
+        def agg_local(stacked_local):
+            def one(leaf):
+                lf = leaf.astype(jnp.float32)     # local silo slice (1,...)
+                axes = tuple(range(1, lf.ndim))
+                scale = (jnp.max(jnp.abs(lf), axis=axes, keepdims=True)
+                         / 127.0 + 1e-12)
+                q = jnp.clip(jnp.round(lf / scale), -127,
+                             127).astype(jnp.int8)
+                qg = jax.lax.all_gather(q, "pod", axis=0, tiled=True)
+                sg = jax.lax.all_gather(scale, "pod", axis=0, tiled=True)
+                deq = qg.astype(jnp.float32) * sg
+                m = jnp.mean(deq, axis=0, keepdims=True)
+                return jnp.broadcast_to(m, leaf.shape).astype(leaf.dtype)
+
+            return jax.tree.map(one, stacked_local)
+
+        step = shard_map(agg_local, mesh=mesh, in_specs=(p_specs,),
+                         out_specs=p_specs, check_rep=False)
+    fn = jax.jit(step, in_shardings=(shd,), out_shardings=shd,
+                 donate_argnums=(0,))
+    return mesh, fn, (a_stacked,)

@@ -1,0 +1,398 @@
+"""Attention: GQA (covers MHA), sliding-window, logit softcap, MLA, cross-attn.
+
+Two execution paths for the softmax-attention core:
+  * ``impl="xla"``    — masked jnp reference (always available, used for decode)
+  * ``impl="pallas"`` — flash-attention Pallas kernel (train/prefill hot path)
+
+KV caches are ring buffers carrying their own position array, so a windowed
+cache (cache_len < seq_len) and a full cache share one code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rms_norm, softcap
+from repro.models.scan_config import cost_mode, scan_unroll_arg
+
+NEG_INF = -2.3819763e38  # most-negative bf16-representable
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention (grouped heads)
+# ---------------------------------------------------------------------------
+def _grouped_scores(q, k):
+    """q: (B,Sq,H,D), k: (B,Sk,Hkv,D) -> scores (B,Hkv,G,Sq,Sk)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def make_attention_mask(q_pos, k_pos, k_valid, *, causal: bool, window):
+    """Boolean mask (B,1,1,Sq,Sk). ``window``<=0 means global.
+
+    q_pos: (B,Sq) int32; k_pos: (B,Sk) int32; k_valid: (B,Sk) bool.
+    ``window`` may be a python int or a traced int32 scalar (per-layer,
+    scanned) — a windowed layer attends to k_pos in (q_pos-window, q_pos].
+    """
+    qp = q_pos[:, :, None]                          # (B,Sq,1)
+    kp = k_pos[:, None, :]                          # (B,1,Sk)
+    m = k_valid[:, None, :]
+    if causal:
+        m = m & (kp <= qp)
+    w = jnp.asarray(window, jnp.int32)
+    m = m & jnp.where(w > 0, kp > qp - w, True)
+    return m[:, None, None, :, :]                   # (B,1,1,Sq,Sk)
+
+
+def _attend_block(q, k, v, mask, *, logit_softcap: float, scale: float):
+    """One q-block of masked softmax attention (scores fully materialized).
+
+    q/k head dim and v head dim may differ (MLA).
+    """
+    import os
+    B, Sq, H, _ = q.shape
+    Dv = v.shape[-1]
+    scores = _grouped_scores(q, k) * scale          # (B,Hkv,G,Sq,Sk) f32
+    if os.environ.get("REPRO_TREE_DECODE") == "1" and Sq == 1:
+        # tree/flash-decode: keep scores sharded on the KV-sequence dim so
+        # the softmax reduces with tiny (B,H) partial-max/sum collectives
+        # instead of all-gathering the sharded KV cache
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.specs import constrain
+        scores = constrain(scores, P(None, None, None, None, "data"))
+    scores = softcap(scores, logit_softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, H, Dv)
+
+
+Q_CHUNK = 512  # q-block size for the memory-bounded XLA attention path
+
+
+def attend_masked(q, k, v, *, q_pos, k_pos, k_valid, causal, window,
+                  logit_softcap: float = 0.0, scale: float,
+                  q_chunk: int = Q_CHUNK):
+    """Masked attention with q-chunking: peak scores buffer is
+    (B, H, q_chunk, Sk) instead of (B, H, Sq, Sk) — the XLA-path equivalent
+    of flash attention's memory behaviour (each chunk body is rematerialized
+    in the backward pass)."""
+    B, Sq = q.shape[:2]
+
+    def block(q_blk, qp_blk):
+        mask = make_attention_mask(qp_blk, k_pos, k_valid,
+                                   causal=causal, window=window)
+        return _attend_block(q_blk, k, v, mask,
+                             logit_softcap=logit_softcap, scale=scale)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0 or cost_mode():
+        return block(q, q_pos)
+
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, *q.shape[2:]).swapaxes(0, 1)
+    ps = q_pos.reshape(B, n, q_chunk).swapaxes(0, 1)
+
+    def body(_, xs):
+        q_blk, qp_blk = xs
+        return None, jax.checkpoint(block)(q_blk, qp_blk)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps),
+                           unroll=scan_unroll_arg())  # (n,B,cq,H,Dv)
+    return outs.swapaxes(0, 1).reshape(B, Sq, *outs.shape[3:])
+
+
+def attend(q, k, v, mask, *, logit_softcap: float = 0.0, scale: float):
+    """Single-block path (decode, small sequences, tests)."""
+    return _attend_block(q, k, v, mask, logit_softcap=logit_softcap,
+                         scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+def gqa_init(key, cfg):
+    D, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * Dh)),
+        "wk": dense_init(ks[1], (D, Hkv * Dh)),
+        "wv": dense_init(ks[2], (D, Hkv * Dh)),
+        "wo": dense_init(ks[3], (H * Dh, D)),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H * Dh,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * Dh,), jnp.float32)
+        p["bo"] = jnp.zeros((D,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((Dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((Dh,), jnp.float32)
+    return p
+
+
+def gqa_project_qkv(p, cfg, x, positions, *, use_rope: bool = True):
+    B, S, _ = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q, k, v = (q + p["bq"].astype(dt), k + p["bk"].astype(dt),
+                   v + p["bv"].astype(dt))
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_out(p, out):
+    B, S = out.shape[:2]
+    dt = out.dtype
+    y = out.reshape(B, S, -1) @ p["wo"].astype(dt)
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return y
+
+
+def gqa_self_attention(p, cfg, x, positions, *, window, causal: bool = True,
+                       impl: str = "xla"):
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    scale = cfg.resolved_head_dim ** -0.5
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(
+            q, k, v, causal=causal, window=int(window),
+            logit_softcap=cfg.attn_logit_softcap, scale=scale)
+    else:
+        out = attend_masked(q, k, v, q_pos=positions, k_pos=positions,
+                            k_valid=jnp.ones(positions.shape, bool),
+                            causal=causal, window=window,
+                            logit_softcap=cfg.attn_logit_softcap,
+                            scale=scale)
+    return gqa_out(p, out)
+
+
+def gqa_prefill(p, cfg, x, positions, *, window, cache_len: int,
+                impl: str = "xla"):
+    """Full-sequence self-attention that also fills a fresh KV cache."""
+    q, k, v = gqa_project_qkv(p, cfg, x, positions)
+    scale = cfg.resolved_head_dim ** -0.5
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as flash_ops
+        out = flash_ops.flash_attention(
+            q, k, v, causal=True, window=int(window),
+            logit_softcap=cfg.attn_logit_softcap, scale=scale)
+    else:
+        out = attend_masked(q, k, v, q_pos=positions, k_pos=positions,
+                            k_valid=jnp.ones(positions.shape, bool),
+                            causal=True, window=window,
+                            logit_softcap=cfg.attn_logit_softcap,
+                            scale=scale)
+    cache = gqa_cache_init(cfg, x.shape[0], cache_len, k.dtype)
+    cache = cache_write(cache, k, v, positions)
+    return gqa_out(p, out), cache
+
+
+def mla_prefill(p, cfg, x, positions, *, cache_len: int):
+    out = mla_self_attention(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latents(p, cfg, x, positions)
+    B = x.shape[0]
+    cache = mla_cache_init(cfg, B, cache_len, c_kv.dtype)
+    T = cache_len
+    slots = positions % T
+    b_idx = jnp.arange(B)[:, None]
+    cache = {
+        "c_kv": cache["c_kv"].at[b_idx, slots].set(c_kv),
+        "k_rope": cache["k_rope"].at[b_idx, slots].set(k_rope),
+        "pos": cache["pos"].at[b_idx, slots].set(positions),
+    }
+    return out, cache
+
+
+# --- decode with ring-buffer cache ----------------------------------------
+def gqa_cache_init(cfg, batch: int, cache_len: int, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, Hkv, Dh), dtype),
+        "v": jnp.zeros((batch, cache_len, Hkv, Dh), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def cache_write(cache, k_new, v_new, positions):
+    """Write S_new entries at ring slots pos % T. positions: (B,S_new)."""
+    T = cache["k"].shape[1]
+    slots = positions % T                                       # (B,S)
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+    k = cache["k"].at[b_idx, slots].set(k_new)
+    v = cache["v"].at[b_idx, slots].set(v_new)
+    pos = cache["pos"].at[b_idx, slots].set(positions)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def gqa_decode(p, cfg, x, cache, positions, *, window):
+    """x: (B,1,D); positions: (B,1) absolute position of the new token."""
+    q, k_new, v_new = gqa_project_qkv(p, cfg, x, positions)
+    cache = cache_write(cache, k_new, v_new, positions)
+    k_valid = cache["pos"] >= 0
+    mask = make_attention_mask(positions, cache["pos"], k_valid,
+                               causal=True, window=window)
+    out = attend(q, cache["k"], cache["v"], mask,
+                 logit_softcap=cfg.attn_logit_softcap,
+                 scale=cfg.resolved_head_dim ** -0.5)
+    return gqa_out(p, out), cache
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+def cross_attention(p, cfg, x, enc_k, enc_v, enc_valid):
+    """x: (B,Sq,D) decoder side; enc_k/enc_v: (B,Se,Hkv,Dh)."""
+    B, Sq, _ = x.shape
+    Se = enc_k.shape[1]
+    H, Dh = cfg.n_heads, cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, Sq, H, Dh)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt).reshape(H, Dh)
+    zeros_q = jnp.zeros((B, Sq), jnp.int32)
+    zeros_k = jnp.zeros((B, Se), jnp.int32)
+    out = attend_masked(q, enc_k, enc_v, q_pos=zeros_q, k_pos=zeros_k,
+                        k_valid=enc_valid, causal=False, window=0,
+                        scale=Dh ** -0.5)
+    return gqa_out(p, out)
+
+
+def cross_kv(p, cfg, enc_out):
+    B, Se, _ = enc_out.shape
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    dt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Se, Hkv, Dh)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Se, Hkv, Dh)
+    if "bk" in p:
+        k = k + p["bk"].astype(dt).reshape(Hkv, Dh)
+        v = v + p["bv"].astype(dt).reshape(Hkv, Dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": dense_init(ks[0], (D, m.q_lora_rank)),
+        "q_norm": jnp.zeros((m.q_lora_rank,), jnp.float32),
+        "w_uq": dense_init(ks[1], (m.q_lora_rank,
+                                   H * (m.qk_nope_dim + m.qk_rope_dim))),
+        # kv down-projection also emits the shared rotary key
+        "w_dkv": dense_init(ks[2], (D, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+        "w_uk": dense_init(ks[3], (m.kv_lora_rank, H * m.qk_nope_dim)),
+        "w_uv": dense_init(ks[4], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": dense_init(ks[5], (H * m.v_head_dim, D)),
+    }
+
+
+def _mla_queries(p, cfg, x, positions):
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    dt = x.dtype
+    q_lat = rms_norm(x @ p["w_dq"].astype(dt), p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["w_uq"].astype(dt)).reshape(
+        B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latents(p, cfg, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    dkv = x @ p["w_dkv"].astype(dt)
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    # shared single-head rotary key
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_rope
+
+
+def mla_self_attention(p, cfg, x, positions, *, causal: bool = True):
+    """Train/prefill path: expand latents to per-head K/V (standard form)."""
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape
+    dt = x.dtype
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latents(p, cfg, x, positions)
+    k_nope = (c_kv @ p["w_uk"].astype(dt)).reshape(B, S, H, m.qk_nope_dim)
+    v = (c_kv @ p["w_uv"].astype(dt)).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :],
+                                          (B, S, H, m.qk_rope_dim))], axis=-1)
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    out = attend_masked(q, k, v, q_pos=positions, k_pos=positions,
+                        k_valid=jnp.ones(positions.shape, bool),
+                        causal=causal, window=0, scale=scale)
+    return (out.reshape(B, S, H * m.v_head_dim) @ p["wo"].astype(dt))
+
+
+def mla_cache_init(cfg, batch: int, cache_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def mla_decode(p, cfg, x, cache, positions):
+    """Absorbed decode: attention runs in the compressed latent space.
+
+    The cache stores only (kv_lora + rope) floats per position — MLA's whole
+    point — and W_uk / W_uv are absorbed into the query/output projections.
+    """
+    m, H = cfg.mla, cfg.n_heads
+    B, S, _ = x.shape                       # S == 1
+    dt = x.dtype
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    c_new, kr_new = _mla_latents(p, cfg, x, positions)
+
+    T = cache["c_kv"].shape[1]
+    slots = positions % T
+    b_idx = jnp.arange(B)[:, None]
+    cache = {
+        "c_kv": cache["c_kv"].at[b_idx, slots].set(c_new),
+        "k_rope": cache["k_rope"].at[b_idx, slots].set(kr_new),
+        "pos": cache["pos"].at[b_idx, slots].set(positions),
+    }
+    w_uk = p["w_uk"].astype(dt).reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    # absorb: q into latent space
+    q_lat = jnp.einsum("bshd,chd->bshc", q_nope, w_uk)       # (B,1,H,C)
+    scores = (jnp.einsum("bshc,btc->bhst", q_lat, cache["c_kv"],
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshd,btd->bhst", q_rope, cache["k_rope"],
+                           preferred_element_type=jnp.float32))
+    scores = scores * ((m.qk_nope_dim + m.qk_rope_dim) ** -0.5)
+    mask = (cache["pos"] >= 0) & (cache["pos"] <= positions[:, :1])
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)       # (B,H,1,T)
+    out_lat = jnp.einsum("bhst,btc->bshc", probs, cache["c_kv"])
+    w_uv = p["w_uv"].astype(dt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bshc,chd->bshd", out_lat, w_uv)
+    return (out.reshape(B, S, H * m.v_head_dim) @ p["wo"].astype(dt)), cache

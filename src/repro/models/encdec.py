@@ -1,0 +1,116 @@
+"""Encoder-decoder backbone (seamless-m4t text/speech LM side).
+
+Encoder: bidirectional self-attention blocks over frontend embeddings.
+Decoder: causal self-attention + cross-attention + MLP, scan-over-layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import mlp_apply, mlp_init, rms_norm
+from repro.models.scan_config import scan_unroll_arg
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+def enc_block_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm_attn": jnp.zeros((cfg.d_model,), jnp.float32),
+        "attn": attn.gqa_init(k1, cfg),
+        "norm_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.use_bias),
+    }
+
+
+def encoder_apply(cfg, stacked, x, positions, *, impl="xla", remat=True):
+    def body(x, lp):
+        h = rms_norm(x, lp["norm_attn"], cfg.norm_eps)
+        x = x + attn.gqa_self_attention(lp["attn"], cfg, h, positions,
+                                        window=0, causal=False, impl=impl)
+        h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked, unroll=scan_unroll_arg())
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+def dec_block_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm_self": jnp.zeros((cfg.d_model,), jnp.float32),
+        "self": attn.gqa_init(k1, cfg),
+        "norm_cross": jnp.zeros((cfg.d_model,), jnp.float32),
+        "cross": attn.gqa_init(k2, cfg),
+        "norm_mlp": jnp.zeros((cfg.d_model,), jnp.float32),
+        "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.use_bias),
+    }
+
+
+def decoder_apply(cfg, stacked, x, positions, enc_out, enc_valid, *,
+                  impl="xla", remat=True):
+    """Teacher-forced full-sequence decoder pass."""
+    def body(x, lp):
+        h = rms_norm(x, lp["norm_self"], cfg.norm_eps)
+        x = x + attn.gqa_self_attention(lp["self"], cfg, h, positions,
+                                        window=0, causal=True, impl=impl)
+        h = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        ek, ev = attn.cross_kv(lp["cross"], cfg, enc_out)
+        x = x + attn.cross_attention(lp["cross"], cfg, h, ek, ev, enc_valid)
+        h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, stacked, unroll=scan_unroll_arg())
+    return x
+
+
+def decoder_cache_init(cfg, batch, cache_len, enc_len, dtype):
+    Hkv, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    one = {
+        "self": attn.gqa_cache_init(cfg, batch, cache_len, dtype),
+        "cross_k": jnp.zeros((batch, enc_len, Hkv, Dh), dtype),
+        "cross_v": jnp.zeros((batch, enc_len, Hkv, Dh), dtype),
+    }
+    return one
+
+
+def decoder_fill_cross(cfg, stacked, cache, enc_out):
+    """Populate per-layer cross K/V from encoder output (prefill step)."""
+    def body(_, xs):
+        lp, c = xs
+        ek, ev = attn.cross_kv(lp["cross"], cfg, enc_out)
+        return None, {**c, "cross_k": ek, "cross_v": ev}
+
+    _, new = jax.lax.scan(body, None, (stacked, cache))
+    return new
+
+
+def decoder_decode(cfg, stacked, x, caches, positions, enc_valid):
+    """One-token decode through stacked decoder layers."""
+    def body(x, xs):
+        lp, cache = xs
+        h = rms_norm(x, lp["norm_self"], cfg.norm_eps)
+        y, self_cache = attn.gqa_decode(lp["self"], cfg, h, cache["self"],
+                                        positions, window=0)
+        x = x + y
+        h = rms_norm(x, lp["norm_cross"], cfg.norm_eps)
+        x = x + attn.cross_attention(lp["cross"], cfg, h, cache["cross_k"],
+                                     cache["cross_v"], enc_valid)
+        h = rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h)
+        return x, {**cache, "self": self_cache}
+
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches

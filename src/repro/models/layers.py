@@ -1,0 +1,137 @@
+"""Shared neural-net building blocks (pure JAX, no framework deps).
+
+Params are plain nested dicts of jnp arrays. Initializers take an explicit
+PRNG key. Compute dtype is the caller's; params are stored fp32 (master) and
+cast at use site by the model wrapper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from repro.models.scan_config import cost_mode, scan_unroll_arg
+
+
+def dense_init(key, shape, in_axis: int = -2, scale: float = 1.0,
+               dtype=jnp.float32):
+    """Truncated-normal fan-in init (the default for all projections)."""
+    fan_in = shape[in_axis]
+    std = scale / (fan_in ** 0.5)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 style logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., S, D/2)
+    sin = jnp.sin(ang)[..., None, :]                       # (..., S, 1, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, use_bias: bool):
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {
+        "w_gate": dense_init(kg, (d_model, d_ff)),
+        "w_up": dense_init(ku, (d_model, d_ff)),
+        "w_down": dense_init(kd, (d_ff, d_model)),
+    }
+    if use_bias:
+        p["b_gate"] = jnp.zeros((d_ff,), jnp.float32)
+        p["b_up"] = jnp.zeros((d_ff,), jnp.float32)
+        p["b_down"] = jnp.zeros((d_model,), jnp.float32)
+    return p
+
+
+def mlp_apply(p, x):
+    dtype = x.dtype
+    gate = x @ p["w_gate"].astype(dtype)
+    up = x @ p["w_up"].astype(dtype)
+    if "b_gate" in p:
+        gate = gate + p["b_gate"].astype(dtype)
+        up = up + p["b_up"].astype(dtype)
+    h = jax.nn.silu(gate) * up
+    out = h @ p["w_down"].astype(dtype)
+    if "b_down" in p:
+        out = out + p["b_down"].astype(dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes the full (B,S,V) logits)
+# ---------------------------------------------------------------------------
+def chunked_softmax_xent(hidden, unembed, labels, mask, *, chunk: int = 512,
+                         final_softcap: float = 0.0):
+    """Mean next-token CE. hidden: (B,S,D); unembed: (D,V); labels: (B,S).
+
+    Computes logits chunk-by-chunk over the sequence inside a remat'd scan so
+    the peak logits buffer is (B, chunk, V) instead of (B, S, V) — the
+    standard production trick for 256k vocabularies.
+    """
+    B, S, D = hidden.shape
+    if cost_mode():
+        chunk = S          # single chunk: no while loop in the cost compile
+    chunk = min(chunk, S)
+    n = S // chunk
+    rem = S - n * chunk
+
+    def chunk_loss(h, y, m):
+        logits = (h @ unembed.astype(h.dtype)).astype(jnp.float32)
+        logits = softcap(logits, final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - gold) * m), jnp.sum(m)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        h, y, m = xs
+        l, c = chunk_loss(h, y, m)
+        return (carry[0] + l, carry[1] + c), None
+
+    hs = hidden[:, :n * chunk].reshape(B, n, chunk, D).swapaxes(0, 1)
+    ys = labels[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    ms = mask[:, :n * chunk].reshape(B, n, chunk).swapaxes(0, 1)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hs, ys, ms),
+                                 unroll=scan_unroll_arg())
+    if rem:
+        l, c = chunk_loss(hidden[:, n * chunk:], labels[:, n * chunk:],
+                          mask[:, n * chunk:])
+        tot, cnt = tot + l, cnt + c
+    return tot / jnp.maximum(cnt, 1.0)

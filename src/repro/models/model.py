@@ -1,0 +1,297 @@
+"""Unified model API over all assigned architecture families.
+
+``Model`` wraps a ``ModelConfig`` and exposes:
+  * ``init(key)``                           — real parameter pytree (fp32 master)
+  * ``abstract_params()``                   — ShapeDtypeStruct pytree (dry-run)
+  * ``loss_fn(params, batch)``              — mean next-token CE + aux losses
+  * ``prefill(params, batch, cache_len)``   — logits for last position + cache
+  * ``decode_step(params, cache, tok, pos)``— one-token decode
+  * ``init_cache(batch, cache_len)`` / ``abstract_cache(...)``
+  * ``input_specs(shape)``                  — ShapeDtypeStruct batch stand-ins
+
+Batch layouts by family:
+  text (dense/moe/ssm/hybrid): {"tokens": (B,S) int32}
+  vlm:   {"tokens": (B, S-P) int32, "patches": (B,P,d_frontend)}
+  audio: {"frames": (B,S,d_frontend), "tokens": (B,S) int32}   (enc-dec)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import encdec, transformer
+from repro.models.layers import (chunked_softmax_xent, dense_init,
+                                 embed_init, rms_norm)
+
+# decode caches longer than this fall back to a ring buffer of the sliding
+# window (long_500k on local/global archs — DESIGN.md §4)
+MAX_FULL_CACHE = 32_768
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, *, impl: str = "xla",
+                 remat: bool = True):
+        self.cfg = cfg
+        self.impl = impl
+        self.remat = remat
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 8)
+        params = {
+            "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model)),
+            "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = dense_init(ks[1],
+                                           (cfg.d_model, cfg.padded_vocab))
+        if cfg.is_encoder_decoder:
+            params["enc_stack"] = jax.vmap(
+                lambda k: encdec.enc_block_init(k, cfg))(
+                    jax.random.split(ks[2], cfg.n_encoder_layers))
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+            params["dec_stack"] = jax.vmap(
+                lambda k: encdec.dec_block_init(k, cfg))(
+                    jax.random.split(ks[3], cfg.n_layers))
+        else:
+            params["stack"] = transformer.stack_init(ks[2], cfg, cfg.n_layers)
+        if cfg.frontend is not None:
+            params["frontend_proj"] = dense_init(
+                ks[4], (cfg.frontend.d_frontend, cfg.d_model))
+        if cfg.n_meta_tokens:
+            params["meta_tokens"] = embed_init(
+                ks[5], (cfg.n_meta_tokens, cfg.d_model))
+        return params
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    def cast(self, params):
+        dt = jnp.dtype(self.cfg.dtype)
+        return jax.tree.map(lambda a: a.astype(dt)
+                            if a.dtype == jnp.float32 else a, params)
+
+    # ------------------------------------------------------------------
+    # Embedding / stream assembly
+    # ------------------------------------------------------------------
+    def _embed_tokens(self, params, tokens):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = params["embed"].astype(dt)[tokens]
+        return x * jnp.asarray(math.sqrt(cfg.d_model), dt)
+
+    def _assemble_stream(self, params, batch):
+        """Returns (embeds (B,S,D), positions (B,S), labels (B,S), mask)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        parts = []
+        n_prefix = 0
+        if cfg.n_meta_tokens:
+            meta = jnp.broadcast_to(params["meta_tokens"].astype(dt)[None],
+                                    (B, cfg.n_meta_tokens, cfg.d_model))
+            parts.append(meta)
+            n_prefix += cfg.n_meta_tokens
+        if cfg.frontend is not None and not cfg.is_encoder_decoder:
+            proj = batch["patches"].astype(dt) @ params["frontend_proj"].astype(dt)
+            parts.append(proj)
+            n_prefix += proj.shape[1]
+        parts.append(self._embed_tokens(params, tokens))
+        x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+        S = x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        # labels: stream position n_prefix + t - 1 predicts tokens[t]
+        T = tokens.shape[1]
+        labels = jnp.zeros((B, S), jnp.int32)
+        mask = jnp.zeros((B, S), jnp.float32)
+        labels = jax.lax.dynamic_update_slice(
+            labels, tokens[:, 1:], (0, n_prefix))
+        mask = jax.lax.dynamic_update_slice(
+            mask, jnp.ones((B, T - 1), jnp.float32), (0, n_prefix))
+        return x, positions, labels, mask, n_prefix
+
+    def _unembed_matrix(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"].T
+        return params["unembed"]
+
+    # ------------------------------------------------------------------
+    # Training loss
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        params = self.cast(params)
+        if cfg.is_encoder_decoder:
+            hidden, labels, mask = self._encdec_forward(params, batch)
+            aux = jnp.zeros((), jnp.float32)
+        else:
+            x, positions, labels, mask, _ = self._assemble_stream(params, batch)
+            windows = transformer.layer_windows(cfg)
+            hidden, aux = transformer.stack_apply(
+                cfg, params["stack"], x, positions, windows,
+                impl=self.impl, remat=self.remat)
+        hidden = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+        ce = chunked_softmax_xent(hidden, self._unembed_matrix(params),
+                                  labels, mask,
+                                  final_softcap=cfg.final_logit_softcap)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def _encdec_forward(self, params, batch):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        frames = batch["frames"].astype(dt)
+        tokens = batch["tokens"]
+        B, Se = frames.shape[:2]
+        enc_in = frames @ params["frontend_proj"].astype(dt)
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None],
+                                   (B, Se))
+        enc_out = encdec.encoder_apply(cfg, params["enc_stack"], enc_in,
+                                       enc_pos, impl=self.impl,
+                                       remat=self.remat)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+        dec_in = self._embed_tokens(params, tokens)
+        Sd = tokens.shape[1]
+        dec_pos = jnp.broadcast_to(jnp.arange(Sd, dtype=jnp.int32)[None],
+                                   (B, Sd))
+        enc_valid = jnp.ones((B, Se), bool)
+        hidden = encdec.decoder_apply(cfg, params["dec_stack"], dec_in,
+                                      dec_pos, enc_out, enc_valid,
+                                      impl=self.impl, remat=self.remat)
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones((B, Sd - 1), jnp.float32), ((0, 0), (0, 1)))
+        return hidden, labels, mask
+
+    # ------------------------------------------------------------------
+    # Serving: prefill + decode
+    # ------------------------------------------------------------------
+    def cache_len_for(self, seq_len: int) -> int:
+        cfg = self.cfg
+        if seq_len > MAX_FULL_CACHE and cfg.sliding_window > 0:
+            return cfg.sliding_window
+        if seq_len > MAX_FULL_CACHE and cfg.block_kind == "ssm":
+            return 1  # SSM carries state, attention cache unused
+        return seq_len
+
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        params = self.cast(params)
+        if cfg.is_encoder_decoder:
+            return self._encdec_prefill(params, batch, cache_len)
+        x, positions, _, _, _ = self._assemble_stream(params, batch)
+        windows = transformer.layer_windows(cfg)
+        hidden, caches = transformer.stack_prefill(
+            cfg, params["stack"], x, positions, windows, cache_len,
+            impl=self.impl, remat=self.remat)
+        hidden = rms_norm(hidden[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, hidden)
+        return logits, caches
+
+    def _encdec_prefill(self, params, batch, cache_len):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        frames = batch["frames"].astype(dt)
+        B, Se = frames.shape[:2]
+        enc_in = frames @ params["frontend_proj"].astype(dt)
+        enc_pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32)[None],
+                                   (B, Se))
+        enc_out = encdec.encoder_apply(cfg, params["enc_stack"], enc_in,
+                                       enc_pos, impl=self.impl,
+                                       remat=self.remat)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+        one = encdec.decoder_cache_init(cfg, B, cache_len, Se, dt)
+        caches = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+            one)
+        caches = encdec.decoder_fill_cross(cfg, params["dec_stack"], caches,
+                                           enc_out)
+        # bos token decode seed
+        bos = jnp.zeros((B, 1), jnp.int32)
+        logits, caches = self._decode_cast(params, caches, bos,
+                                           jnp.zeros((B, 1), jnp.int32))
+        return logits, caches
+
+    def init_cache(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if cfg.is_encoder_decoder:
+            enc_len = cache_len
+            one = encdec.decoder_cache_init(cfg, batch, cache_len, enc_len, dt)
+            return jax.tree.map(
+                lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+        return transformer.stack_cache_init(cfg, batch, cache_len, dt,
+                                            cfg.n_layers)
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return jax.eval_shape(partial(self.init_cache, batch, cache_len))
+
+    def _logits(self, params, hidden_last):
+        dt = hidden_last.dtype
+        logits = hidden_last @ self._unembed_matrix(params).astype(dt)
+        logits = logits[..., :self.cfg.vocab]     # drop padded vocab ids
+        if self.cfg.final_logit_softcap > 0:
+            from repro.models.layers import softcap
+            logits = softcap(logits.astype(jnp.float32),
+                             self.cfg.final_logit_softcap)
+        return logits
+
+    def _decode_cast(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = self._embed_tokens(params, token)
+        if cfg.is_encoder_decoder:
+            B = token.shape[0]
+            Se = cache["cross_k"].shape[2]
+            enc_valid = jnp.ones((B, Se), bool)
+            hidden, cache = encdec.decoder_decode(
+                cfg, params["dec_stack"], x, cache, pos, enc_valid)
+        else:
+            windows = transformer.layer_windows(cfg)
+            hidden, cache = transformer.stack_decode(
+                cfg, params["stack"], x, cache, pos, windows)
+        hidden = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+        return self._logits(params, hidden), cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,1) int32; pos: (B,1) absolute stream position."""
+        params = self.cast(params)
+        return self._decode_cast(params, cache, token, pos)
+
+    # ------------------------------------------------------------------
+    # Dry-run input specs (no allocation)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: InputShape):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if shape.mode in ("train", "prefill"):
+            if cfg.is_encoder_decoder:
+                return {"frames": sds((B, S, cfg.frontend.d_frontend), dt),
+                        "tokens": sds((B, S), i32)}
+            if cfg.frontend is not None:
+                P = cfg.frontend.num_tokens
+                return {"patches": sds((B, P, cfg.frontend.d_frontend), dt),
+                        "tokens": sds((B, S - P), i32)}
+            return {"tokens": sds((B, S), i32)}
+        # decode: (cache, token, pos)
+        cache_len = self.cache_len_for(S)
+        cache = self.abstract_cache(B, cache_len)
+        return {"cache": cache, "token": sds((B, 1), i32),
+                "pos": sds((B, 1), i32)}
+
+
+def build_model(name_or_cfg, **kw) -> Model:
+    if isinstance(name_or_cfg, str):
+        from repro.configs import get_config
+        name_or_cfg = get_config(name_or_cfg)
+    return Model(name_or_cfg, **kw)

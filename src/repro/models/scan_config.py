@@ -1,0 +1,32 @@
+"""Scan-unroll / cost-mode switches for the dry-run.
+
+XLA's cost analysis counts a while-loop body ONCE regardless of trip count
+(verified: scan of 10 matmuls reports the flops of 1 — see EXPERIMENTS.md
+§Dry-run). The roofline pass therefore re-lowers each program in
+``REPRO_COST_MODE=1``:
+
+  * layer scans unrolled  -> per-layer flops/collectives counted L times
+  * q-chunked attention and chunked CE disabled (single big einsums, no
+    inner while loops) -> attention/logit flops counted exactly
+
+Cost-mode HLO is for ``cost_analysis`` + collective counting ONLY — its
+buffers (full S x S scores) are never allocated and its memory analysis is
+meaningless; the memory roofline term comes from the analytic traffic model
+in launch/roofline_model.py instead. Production/test paths keep rolled
+scans and chunked attention.
+"""
+from __future__ import annotations
+
+import os
+
+
+def cost_mode() -> bool:
+    return os.environ.get("REPRO_COST_MODE", "0") == "1"
+
+
+def unroll_scans() -> bool:
+    return cost_mode() or os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan_unroll_arg():
+    return True if unroll_scans() else 1

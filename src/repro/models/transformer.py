@@ -1,0 +1,233 @@
+"""Decoder stack: scan-over-layers with stacked params.
+
+All per-layer parameters are stacked on a leading (n_layers,) axis and the
+forward pass is a single ``lax.scan`` — HLO size is independent of depth,
+which keeps the 64-layer/104B dry-run compiles fast. Per-layer heterogeneity
+(local vs global attention windows) rides along as scan xs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (BLOCK_ATTN, BLOCK_HYBRID, BLOCK_MOE,
+                                BLOCK_SSM, ATTN_MLA)
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, rms_norm
+from repro.models.scan_config import scan_unroll_arg
+
+
+def _seq_shard(x):
+    """seqpar variant (REPRO_SEQ_SHARD=1): constrain the residual stream to
+    (batch:data, seq:model) between blocks — Megatron sequence parallelism.
+    XLA then emits reduce-scatter/all-gather pairs around each TP region
+    instead of full activation all-reduces."""
+    import os
+    if os.environ.get("REPRO_SEQ_SHARD") != "1" or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.specs import constrain
+    return constrain(x, P("data", "model", None))
+
+
+def layer_windows(cfg) -> np.ndarray:
+    """(L,) int32: sliding window per layer; 0 = global attention."""
+    return np.array(
+        [cfg.sliding_window if cfg.layer_is_local(i) else 0
+         for i in range(cfg.n_layers)], np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def block_init(key, cfg):
+    ks = jax.random.split(key, 6)
+    p = {"norm_attn": jnp.zeros((cfg.d_model,), jnp.float32)}
+    kind = cfg.block_kind
+    if kind in (BLOCK_ATTN, BLOCK_MOE, BLOCK_HYBRID):
+        p["attn"] = (attn.mla_init(ks[0], cfg)
+                     if cfg.attn_kind == ATTN_MLA else attn.gqa_init(ks[0], cfg))
+    if kind in (BLOCK_SSM, BLOCK_HYBRID):
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg)
+    if kind == BLOCK_MOE:
+        p["moe"] = moe_mod.moe_init(ks[2], cfg)
+        p["norm_mlp"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    elif cfg.d_ff > 0:
+        p["mlp"] = mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.use_bias)
+        p["norm_mlp"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def block_apply(cfg, p, x, positions, window, *, impl: str = "xla"):
+    """Full-sequence block. Returns (x, aux_loss)."""
+    kind = cfg.block_kind
+    aux = jnp.zeros((), jnp.float32)
+    x = _seq_shard(x)
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    if kind == BLOCK_SSM:
+        x = x + ssm_mod.ssm_forward(p["ssm"], cfg, h, impl=impl)
+    elif kind == BLOCK_HYBRID:
+        a = attn.gqa_self_attention(p["attn"], cfg, h, positions,
+                                    window=window, impl=impl)
+        s = ssm_mod.ssm_forward(p["ssm"], cfg, h, impl=impl)
+        x = x + 0.5 * (a + s)          # Hymba: fused parallel heads
+    else:
+        if cfg.attn_kind == ATTN_MLA:
+            x = x + attn.mla_self_attention(p["attn"], cfg, h, positions)
+        else:
+            x = x + attn.gqa_self_attention(p["attn"], cfg, h, positions,
+                                            window=window, impl=impl)
+    if kind == BLOCK_MOE:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        y, aux = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h)
+    return _seq_shard(x), aux
+
+
+def block_cache_init(cfg, batch: int, cache_len: int, dtype):
+    kind = cfg.block_kind
+    c = {}
+    if kind in (BLOCK_ATTN, BLOCK_MOE, BLOCK_HYBRID):
+        c["attn"] = (attn.mla_cache_init(cfg, batch, cache_len, dtype)
+                     if cfg.attn_kind == ATTN_MLA
+                     else attn.gqa_cache_init(cfg, batch, cache_len, dtype))
+    if kind in (BLOCK_SSM, BLOCK_HYBRID):
+        c["ssm"] = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+    return c
+
+
+def block_decode(cfg, p, x, cache, positions, window):
+    """One-token decode. x: (B,1,D). Returns (x, new_cache)."""
+    kind = cfg.block_kind
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    new_cache = dict(cache)
+    if kind == BLOCK_SSM:
+        y, new_cache["ssm"] = ssm_mod.ssm_decode(p["ssm"], cfg, h,
+                                                 cache["ssm"])
+        x = x + y
+    elif kind == BLOCK_HYBRID:
+        a, new_cache["attn"] = attn.gqa_decode(p["attn"], cfg, h,
+                                               cache["attn"], positions,
+                                               window=window)
+        s, new_cache["ssm"] = ssm_mod.ssm_decode(p["ssm"], cfg, h,
+                                                 cache["ssm"])
+        x = x + 0.5 * (a + s)
+    else:
+        if cfg.attn_kind == ATTN_MLA:
+            y, new_cache["attn"] = attn.mla_decode(p["attn"], cfg, h,
+                                                   cache["attn"], positions)
+        else:
+            y, new_cache["attn"] = attn.gqa_decode(p["attn"], cfg, h,
+                                                   cache["attn"], positions,
+                                                   window=window)
+        x = x + y
+    if kind == BLOCK_MOE:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h)
+    return x, new_cache
+
+
+def block_prefill(cfg, p, x, positions, window, cache_len: int, *,
+                  impl: str = "xla"):
+    """Full-sequence pass that also produces this block's decode cache."""
+    kind = cfg.block_kind
+    h = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    cache = {}
+    if kind == BLOCK_SSM:
+        y, cache["ssm"] = ssm_mod.ssm_prefill(p["ssm"], cfg, h, impl=impl)
+        x = x + y
+    elif kind == BLOCK_HYBRID:
+        a, cache["attn"] = attn.gqa_prefill(p["attn"], cfg, h, positions,
+                                            window=window,
+                                            cache_len=cache_len, impl=impl)
+        s, cache["ssm"] = ssm_mod.ssm_prefill(p["ssm"], cfg, h, impl=impl)
+        x = x + 0.5 * (a + s)
+    else:
+        if cfg.attn_kind == ATTN_MLA:
+            y, cache["attn"] = attn.mla_prefill(p["attn"], cfg, h, positions,
+                                                cache_len=cache_len)
+        else:
+            y, cache["attn"] = attn.gqa_prefill(p["attn"], cfg, h, positions,
+                                                window=window,
+                                                cache_len=cache_len,
+                                                impl=impl)
+        x = x + y
+    if kind == BLOCK_MOE:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        y, _ = moe_mod.moe_apply(p["moe"], cfg, h)
+        x = x + y
+    elif "mlp" in p:
+        h = rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked layer scan
+# ---------------------------------------------------------------------------
+def stack_init(key, cfg, n_layers: int):
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(lambda k: block_init(k, cfg))(keys)
+
+
+def stack_apply(cfg, stacked, x, positions, windows, *, impl: str = "xla",
+                remat: bool = True):
+    """windows: (L,) int32 array. Returns (x, total_aux)."""
+    def body(carry, xs):
+        x, aux = carry
+        lp, w = xs
+        x, a = block_apply(cfg, lp, x, positions, w, impl=impl)
+        return (x, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (stacked, jnp.asarray(windows)),
+                               unroll=scan_unroll_arg())
+    return x, aux
+
+
+def stack_decode(cfg, stacked, x, caches, positions, windows):
+    """caches: pytree with leading (L,) axis. Returns (x, new_caches)."""
+    def body(x, xs):
+        lp, cache, w = xs
+        x, new_cache = block_decode(cfg, lp, x, cache, positions, w)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(
+        body, x, (stacked, caches, jnp.asarray(windows)))
+    return x, new_caches
+
+
+def stack_prefill(cfg, stacked, x, positions, windows, cache_len: int, *,
+                  impl: str = "xla", remat: bool = True):
+    """Returns (x, stacked caches with leading (L,) axis)."""
+    def body(x, xs):
+        lp, w = xs
+        x, cache = block_prefill(cfg, lp, x, positions, w,
+                                 cache_len, impl=impl)
+        return x, cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, (stacked, jnp.asarray(windows)),
+                             unroll=scan_unroll_arg())
+    return x, caches
+
+
+def stack_cache_init(cfg, batch: int, cache_len: int, dtype, n_layers: int):
+    one = block_cache_init(cfg, batch, cache_len, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_layers,) + a.shape).copy(),
+        one)

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (Optimizer, adamw, apply_updates,
+                               clip_by_global_norm, cosine_schedule,
+                               sgd)  # noqa: F401
+from repro.optim.outer import (OUTER_REGISTRY, OuterOptimizer, fedadam,
+                               fedavg, fedavgm)  # noqa: F401

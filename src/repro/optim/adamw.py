@@ -1,0 +1,107 @@
+"""Inner (per-silo) optimizers: AdamW and SGD, pure-pytree, optax-style.
+
+No optax offline — this is the minimal production subset: global-norm
+clipping, decoupled weight decay, cosine LR schedule, fp32 state regardless
+of compute dtype.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, state)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(math.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, max_grad_norm: float = 1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** c), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** c), v)
+        step_lr = lr_fn(count)
+        updates = jax.tree.map(
+            lambda mh_, vh_, p: -step_lr * (mh_ / (jnp.sqrt(vh_) + eps)
+                                            + weight_decay
+                                            * p.astype(jnp.float32)),
+            mh, vh, params)
+        return updates, {"m": m, "v": v, "count": count,
+                         }, {"grad_norm": gnorm, "lr": step_lr}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, *, momentum: float = 0.0, max_grad_norm: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {"count": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mu"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        gnorm = jnp.zeros((), jnp.float32)
+        if max_grad_norm:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        step_lr = lr_fn(count)
+        new_state = {"count": count}
+        if momentum:
+            mu = jax.tree.map(lambda mu_, g: momentum * mu_
+                              + g.astype(jnp.float32), state["mu"], grads)
+            new_state["mu"] = mu
+            grads = mu
+        updates = jax.tree.map(lambda g: -step_lr * g.astype(jnp.float32),
+                               grads)
+        return updates, new_state, {"grad_norm": gnorm, "lr": step_lr}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,78 @@
+"""Server-side ("outer") optimizers for federated rounds — FedOpt family.
+
+The server treats (global_params - aggregated_client_params) as a
+pseudo-gradient and applies an outer optimizer step. FedAvg is the identity
+outer step; FedAvgM adds Nesterov-style server momentum; FedAdam is
+adaptive. [Reddi et al., Adaptive Federated Optimization]
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OuterOptimizer(NamedTuple):
+    name: str
+    init: Callable
+    step: Callable   # (global_params, aggregated, state) -> (params, state)
+
+
+def fedavg() -> OuterOptimizer:
+    def init(params):
+        return {}
+
+    def step(global_params, aggregated, state):
+        return aggregated, state
+
+    return OuterOptimizer("fedavg", init, step)
+
+
+def fedavgm(server_lr: float = 1.0, momentum: float = 0.9) -> OuterOptimizer:
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def step(global_params, aggregated, state):
+        delta = jax.tree.map(
+            lambda g, a: g.astype(jnp.float32) - a.astype(jnp.float32),
+            global_params, aggregated)
+        mu = jax.tree.map(lambda m, d: momentum * m + d, state["mu"], delta)
+        new = jax.tree.map(
+            lambda g, m: (g.astype(jnp.float32) - server_lr * m)
+            .astype(g.dtype), global_params, mu)
+        return new, {"mu": mu}
+
+    return OuterOptimizer("fedavgm", init, step)
+
+
+def fedadam(server_lr: float = 1e-2, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> OuterOptimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def step(global_params, aggregated, state):
+        delta = jax.tree.map(
+            lambda a, g: a.astype(jnp.float32) - g.astype(jnp.float32),
+            aggregated, global_params)                   # ascent direction
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d,
+                         state["m"], delta)
+        v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d),
+                         state["v"], delta)
+        new = jax.tree.map(
+            lambda g, m_, v_: (g.astype(jnp.float32)
+                               + server_lr * m_ / (jnp.sqrt(v_) + eps))
+            .astype(g.dtype), global_params, m, v)
+        return new, {"m": m, "v": v, "count": state["count"] + 1}
+
+    return OuterOptimizer("fedadam", init, step)
+
+
+OUTER_REGISTRY = {
+    "fedavg": fedavg,
+    "fedavgm": fedavgm,
+    "fedadam": fedadam,
+}

@@ -1,0 +1,2 @@
+from repro.sharding.specs import (cache_pspecs, param_pspecs,
+                                  to_shardings)  # noqa: F401

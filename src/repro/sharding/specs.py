@@ -1,0 +1,136 @@
+"""FSDP×TP parameter sharding rules for the production mesh.
+
+Strategy (baseline, see EXPERIMENTS.md §Perf for iterations):
+  * Tensor-parallel ("model" axis): the Megatron dimension of each matrix —
+    output-feature dim for up-projections (wq/wk/wv/w_gate/w_up/in_proj/...),
+    input-feature dim for down-projections (wo/w_down/out_proj). MoE expert
+    stacks shard the *expert* dim over "model" (expert parallelism).
+  * FSDP ("data" axis): the remaining feature dim (ZeRO-3: parameters and
+    Adam state sharded; XLA inserts the per-layer all-gathers inside the
+    layer scan).
+  * "pod" axis: parameters are NEVER sharded over pods. In the multi-pod FL
+    program every leaf gains a leading (n_pods,) silo dim sharded P("pod")
+    — silos hold independent replicas (FL semantics), handled in
+    launch/train.py, not here.
+
+Every rule degrades to replication when a dim is not divisible by the mesh
+axis — correctness first, the roofline table shows the cost.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# param-name → (tp_dim, fsdp_dim) counted from the *end* of the shape
+# (so stacked (L, ...) leading axes are ignored automatically).
+_UP = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "router", "w_dq",
+       "w_uq", "w_dkv", "w_uk", "w_uv", "frontend_proj", "unembed"}
+_DOWN = {"wo", "w_down", "out_proj"}
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _leaf_spec(path, leaf, mesh, mode: str = "train"):
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = next((n for n in reversed(names) if isinstance(n, str)), "")
+    nd = leaf.ndim
+    spec = [None] * nd
+    model = _axis_size(mesh, "model")
+    # serve mode: TP-only — FSDP-sharded weights would be all-gathered on
+    # every decode step (measured 2.2GB/step for gemma2; EXPERIMENTS §Perf)
+    data = _axis_size(mesh, "data") if mode == "train" else 1
+
+    def try_shard(dim, axis, size):
+        if spec[dim] is None and leaf.shape[dim] % size == 0 and size > 1:
+            spec[dim] = axis
+            return True
+        return False
+
+    if nd <= 1:
+        return P(*spec)                       # norms/biases: replicated
+
+    is_moe_expert = name in ("w_gate", "w_up", "w_down") and nd >= 4
+    if is_moe_expert:
+        # (L, E, din, dout): expert-parallel over "model", FSDP on din
+        try_shard(nd - 3, "model", model)
+        try_shard(nd - 2, "data", data)
+        return P(*spec)
+
+    if name == "embed":
+        # (V, D): vocab-parallel (Megatron): V over model, D replicated.
+        # Replicating D keeps the unembed contraction collective-free so the
+        # (B,S,V) logits are never all-reduced — the CE all-reduce is then
+        # just the (B,S) logsumexp partials. FSDP-sharding D here was
+        # measured to cost 2 x 67GB logits all-reduces per step (see
+        # EXPERIMENTS.md §Perf, iteration 0).
+        try_shard(0, "model", model)
+        return P(*spec)
+    if name == "meta_tokens":
+        return P(*spec)
+    if name == "conv_w":
+        try_shard(nd - 1, "model", model)
+        return P(*spec)
+
+    if name in _DOWN:
+        tp_dim, fsdp_dim = nd - 2, nd - 1     # contract dim TP'd
+    elif name in _UP:
+        tp_dim, fsdp_dim = nd - 1, nd - 2
+    else:
+        tp_dim, fsdp_dim = nd - 1, nd - 2
+    try_shard(tp_dim, "model", model)
+    try_shard(fsdp_dim, "data", data)
+    return P(*spec)
+
+
+def param_pspecs(params_like, mesh, mode: str = "train"):
+    """PartitionSpec pytree for a parameter (or optimizer-state) pytree.
+
+    mode="train": FSDP x TP. mode="serve": TP only (weights replicated over
+    the data axis — decode batches need whole weights every step).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, mesh, mode), params_like)
+
+
+def cache_pspecs(cache_like, mesh, *, batch: int):
+    """Decode-cache shardings.
+
+    Caches are (L, B, T, H, D)-ish. Shard batch over "data" when divisible;
+    otherwise (long_500k, B=1) shard the *sequence/time* dim over "data"
+    so the half-TB KV cache fits. Heads (or head_dim) shard over "model".
+    """
+    data = _axis_size(mesh, "data")
+    model = _axis_size(mesh, "model")
+
+    def spec(leaf):
+        nd = leaf.ndim
+        spec = [None] * nd
+        # leading L (scan) axis never sharded; find batch dim = axis 1
+        if nd >= 2 and leaf.shape[1] == batch and batch % data == 0 and data > 1:
+            spec[1] = "data"
+        elif nd >= 3 and leaf.shape[2] % data == 0 and data > 1:
+            spec[2] = "data"                  # sequence dim (ring cache)
+        for d in range(nd - 1, 1, -1):        # innermost: try model axis
+            if spec[d] is None and leaf.shape[d] % model == 0 and model > 1:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    return jax.tree.map(spec, cache_like)
+
+
+def to_shardings(pspecs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that degrades to identity when no mesh is
+    in scope (CPU unit tests) or the spec's axes are absent."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError, KeyError):
+        return x

@@ -1,0 +1,3 @@
+from repro.training.steps import (fedavg_pod_params, make_fedavg_pod_step,
+                                  make_multipod_train_step,
+                                  make_train_step)  # noqa: F401

@@ -1,0 +1,97 @@
+"""jit-able training / aggregation steps (single-pod and multi-pod FL).
+
+Multi-pod FL semantics (DESIGN.md §2): every pytree leaf gains a leading
+(n_pods,) *silo* dimension sharded over the "pod" mesh axis. The per-silo
+step is ``vmap``-ed over that dim with ``spmd_axis_name="pod"`` so XLA keeps
+all per-silo compute pod-local; the only cross-pod traffic is the explicit
+FedAvg collective in ``make_fedavg_pod_step`` — exactly the paper's Model
+Aggregator, lowered to ICI/DCN.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def make_train_step(model, opt):
+    """Single-silo step: (params, opt_state, batch) -> (params, opt, metrics)."""
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        updates, opt_state, opt_info = opt.update(grads, opt_state, params)
+        from repro.optim import apply_updates
+        params = apply_updates(params, updates)
+        metrics = {**metrics, **opt_info, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_multipod_train_step(model, opt, n_pods: int):
+    """vmap the single-silo step over the leading silo dim (pod-sharded)."""
+    step = make_train_step(model, opt)
+    return jax.vmap(step, in_axes=0, out_axes=0, spmd_axis_name="pod")
+
+
+def fedavg_pod_params(stacked_params, weights=None):
+    """Model Aggregator data plane: weighted mean over the silo dim.
+
+    stacked_params: leaves (n_pods, ...) sharded P("pod", ...). The mean
+    lowers to an all-reduce over the pod axis; broadcasting back re-installs
+    the silo dim so training can continue from the aggregate.
+    """
+    def agg(leaf):
+        n = leaf.shape[0]
+        lf = leaf.astype(jnp.float32)
+        if weights is None:
+            m = jnp.mean(lf, axis=0, keepdims=True)
+        else:
+            w = (weights / jnp.sum(weights)).astype(jnp.float32)
+            m = jnp.tensordot(w, lf, axes=(0, 0))[None]
+        return jnp.broadcast_to(m, leaf.shape).astype(leaf.dtype)
+
+    return jax.tree.map(agg, stacked_params)
+
+
+def make_fedavg_pod_step(quantize: bool = False, pspecs=None):
+    """Returns the jit-able cross-pod aggregation step.
+
+    quantize=True is the beyond-paper variant: per-silo symmetric int8
+    quantization exchanged *as int8* across the pod axis (all-gather of the
+    quantized tensors, dequant + mean locally) — 4x less DCN traffic than
+    the fp32 all-reduce (EXPERIMENTS.md §Perf; the secure_agg Pallas kernel
+    fuses the same dequant+weighted-sum on TPU). ``pspecs`` must be the
+    pod-stacked parameter PartitionSpecs so the exchange constraint drops
+    ONLY the pod axis and keeps intra-pod FSDP x TP shards in place.
+    """
+    if not quantize:
+        return fedavg_pod_params
+
+    def quantized_fedavg(stacked_params, weights=None):
+        from jax.sharding import PartitionSpec as P
+        from repro.sharding.specs import constrain
+
+        def agg(leaf, spec):
+            lf = leaf.astype(jnp.float32)
+            # per-silo symmetric int8 quantization
+            axes = tuple(range(1, lf.ndim))
+            scale = (jnp.max(jnp.abs(lf), axis=axes, keepdims=True) / 127.0
+                     + 1e-12)
+            q = jnp.clip(jnp.round(lf / scale), -127, 127).astype(jnp.int8)
+            # exchange the *int8* tensor across pods: same intra-pod shard
+            # layout, pod axis dropped -> all-gather of int8
+            inner = tuple(spec)[1:] if spec is not None else \
+                (None,) * (lf.ndim - 1)
+            q = constrain(q, P(None, *inner))
+            scale = constrain(scale, P(*([None] * lf.ndim)))
+            deq = q.astype(jnp.float32) * scale
+            m = jnp.mean(deq, axis=0, keepdims=True)
+            return jnp.broadcast_to(m, leaf.shape).astype(leaf.dtype)
+
+        if pspecs is None:
+            return jax.tree.map(lambda l: agg(l, None), stacked_params)
+        return jax.tree.map(agg, stacked_params, pspecs)
+
+    return quantized_fedavg

@@ -1,0 +1,37 @@
+import os
+import sys
+
+# tests run against src/ without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=32, seed=0):
+    """Family-correct synthetic batch for a (reduced) config."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    if cfg.is_encoder_decoder:
+        return {"frames": jnp.asarray(
+                    rng.normal(size=(B, S, cfg.frontend.d_frontend))
+                    .astype(np.float32)),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))}
+    if cfg.frontend is not None:
+        P = cfg.frontend.num_tokens
+        return {"patches": jnp.asarray(
+                    rng.normal(size=(B, P, cfg.frontend.d_frontend))
+                    .astype(np.float32)),
+                "tokens": jnp.asarray(
+                    rng.integers(0, cfg.vocab, (B, max(S - P, 8)))
+                    .astype(np.int32))}
+    return {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, S)).astype(np.int32))}

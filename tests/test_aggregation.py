@@ -1,0 +1,96 @@
+"""Model Aggregator strategies + secure masking + metadata/validation."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import secure_agg
+from repro.core.aggregation import (aggregate, coordinate_median, fedavg,
+                                    trimmed_mean)
+from repro.core.contribution import (data_size_contribution,
+                                     leave_one_out_contribution,
+                                     update_norm_contribution)
+
+
+def trees(vals):
+    return [{"w": np.full((3, 2), v, np.float32),
+             "b": {"x": np.array([v, -v], np.float32)}} for v in vals]
+
+
+def test_fedavg_weighted():
+    out = fedavg(trees([0.0, 1.0]), weights=[3.0, 1.0])
+    np.testing.assert_allclose(out["w"], 0.25)
+    out = fedavg(trees([2.0, 4.0]))
+    np.testing.assert_allclose(out["w"], 3.0)
+
+
+def test_trimmed_mean_kills_outlier():
+    out = trimmed_mean(trees([1.0, 1.0, 1.0, 100.0, -100.0]), trim=1)
+    np.testing.assert_allclose(out["w"], 1.0)
+    with pytest.raises(ValueError):
+        trimmed_mean(trees([1.0, 2.0]), trim=1)
+
+
+def test_median_robust():
+    out = coordinate_median(trees([1.0, 2.0, 1000.0]))
+    np.testing.assert_allclose(out["w"], 2.0)
+
+
+def test_aggregate_dispatch():
+    for name in ("fedavg", "trimmed_mean", "median"):
+        kw = {"trim": 1} if name == "trimmed_mean" else {}
+        out = aggregate(name, trees([1.0, 2.0, 3.0]), **kw)
+        assert out["w"].shape == (3, 2)
+
+
+# ---------------------------------------------------------------------------
+# secure aggregation: pairwise masks cancel exactly in the cohort mean
+# ---------------------------------------------------------------------------
+def test_masks_cancel_in_mean():
+    cohort = ["c0", "c1", "c2", "c3"]
+    secret = b"pairwise-secret"
+    updates = trees([1.0, 2.0, 3.0, 4.0])
+    masked = [secure_agg.mask_update(u, cid, cohort, secret, scale=10.0)
+              for u, cid in zip(updates, cohort)]
+    # each individual masked update differs a lot from its plaintext
+    assert np.abs(masked[0]["w"] - updates[0]["w"]).max() > 0.5
+    agg = secure_agg.aggregate_masked(masked)
+    np.testing.assert_allclose(agg["w"], 2.5, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        agg["b"]["x"], np.array([2.5, -2.5]), rtol=1e-5, atol=1e-5)
+
+
+def test_mask_depends_on_cohort():
+    u = trees([1.0])[0]
+    m1 = secure_agg.mask_update(u, "c0", ["c0", "c1"], b"s")
+    m2 = secure_agg.mask_update(u, "c0", ["c0", "c2"], b"s")
+    assert np.abs(m1["w"] - m2["w"]).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# contribution measurement
+# ---------------------------------------------------------------------------
+def test_data_size_contribution():
+    out = data_size_contribution({"a": 30, "b": 10})
+    assert out == {"a": 0.75, "b": 0.25}
+
+
+def test_update_norm_contribution():
+    base = trees([0.0])[0]
+    ups = {"a": trees([1.0])[0], "b": trees([3.0])[0]}
+    out = update_norm_contribution(ups, base)
+    assert out["b"] > out["a"]
+    assert abs(sum(out.values()) - 1.0) < 1e-6
+
+
+def test_leave_one_out_contribution():
+    # eval = distance of aggregated "w" from 2.0 -> client with value 2.0
+    # helps most (removing it increases loss)
+    ups = {"good": trees([2.0])[0], "bad": trees([8.0])[0]}
+
+    def eval_fn(params):
+        return float(np.abs(np.asarray(params["w"]) - 2.0).mean())
+
+    out = leave_one_out_contribution(ups, eval_fn)
+    assert out["good"] > out["bad"]

@@ -1,0 +1,63 @@
+"""Client Management: users, registration lifecycle, device tokens (§VII)."""
+import pytest
+
+from repro.core.clients import ClientManagement
+from repro.core.metadata import MetadataStore
+
+
+@pytest.fixture
+def cm():
+    cm = ClientManagement(MetadataStore())
+    cm.create_user("bootstrap", "admin", "coordinator", "pw-admin",
+                   role="server_admin")
+    cm.create_user("admin", "alice", "windco", "pw-a")
+    return cm
+
+
+def test_password_auth(cm):
+    assert cm.authenticate_user("alice", "pw-a")
+    assert not cm.authenticate_user("alice", "wrong")
+    assert not cm.authenticate_user("ghost", "pw")
+
+
+def test_registration_lifecycle(cm):
+    cid = cm.request_registration("alice", "windco")
+    assert cm.registry[cid].status == "pending"
+    assert cid not in cm.active_clients()
+    cm.approve_client("admin", cid)
+    assert cid in cm.active_clients()
+    cm.revoke_client("admin", cid, reason="compromised")
+    assert cid not in cm.active_clients()
+
+
+def test_registration_requires_matching_org(cm):
+    with pytest.raises(PermissionError):
+        cm.request_registration("alice", "solarx")
+    with pytest.raises(PermissionError):
+        cm.request_registration("nobody", "windco")
+
+
+def test_tokens_rotate_per_run(cm):
+    cid = cm.request_registration("alice", "windco")
+    cm.approve_client("admin", cid)
+    t1 = cm.issue_tokens("run-1")[cid]
+    assert cm.validate_token(cid, t1)
+    t2 = cm.issue_tokens("run-2")[cid]
+    assert t1 != t2
+    assert not cm.validate_token(cid, t1)      # old token dead
+    assert cm.validate_token(cid, t2)
+
+
+def test_revoked_client_gets_no_token(cm):
+    cid = cm.request_registration("alice", "windco")
+    cm.approve_client("admin", cid)
+    cm.revoke_client("admin", cid)
+    assert cid not in cm.issue_tokens("run-3")
+    assert not cm.validate_token(cid, "anything")
+
+
+def test_check_registered(cm):
+    cid = cm.request_registration("alice", "windco")
+    cm.approve_client("admin", cid)
+    out = cm.check_registered([cid, "client-nope"])
+    assert out == {cid: True, "client-nope": False}

@@ -1,0 +1,99 @@
+"""Communicator: encryption, compression, auth, pull-based semantics."""
+import numpy as np
+import pytest
+
+from repro.core import crypto
+from repro.core.clients import ClientManagement
+from repro.core.communicator import (ClientCommunicator, MessageBoard,
+                                     ServerCommunicator)
+from repro.core.metadata import MetadataStore
+from repro.core.serialization import pack, unpack
+
+MASTER = b"m" * 32
+
+
+def make_stack():
+    md = MetadataStore()
+    cm = ClientManagement(md)
+    cm.create_user("bootstrap", "admin", "coord", "pw", role="server_admin")
+    cm.create_user("admin", "alice", "windco", "pw-a")
+    cid = cm.request_registration("alice", "windco")
+    cm.approve_client("admin", cid)
+    token = cm.issue_tokens("run-x")[cid]
+    board = MessageBoard(cm, md)
+    server = ServerCommunicator(board, MASTER)
+    client = ClientCommunicator(board, cid, token,
+                                channel_key=server.channel_key(cid),
+                                broadcast_key=server.broadcast_key(),
+                                ca_key=MASTER)
+    return board, server, client, cid, token
+
+
+def test_crypto_roundtrip_and_tamper():
+    key = crypto.derive_key(MASTER, "test")
+    msg = b"federated" * 100
+    blob = crypto.encrypt(key, msg)
+    assert crypto.decrypt(key, blob) == msg
+    assert len(blob) < len(msg)               # compression works on text
+    tampered = blob[:40] + bytes([blob[40] ^ 1]) + blob[41:]
+    with pytest.raises(ValueError, match="authentication"):
+        crypto.decrypt(key, tampered)
+    with pytest.raises(ValueError):
+        crypto.decrypt(crypto.derive_key(MASTER, "other"), blob)
+
+
+def test_serialization_pytree_roundtrip():
+    tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "meta": {"n": 3, "name": "x"},
+            "b": np.array(2.5, dtype=np.float64)}
+    out = unpack(pack(tree))
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    assert out["meta"] == tree["meta"]
+    assert float(out["b"]) == 2.5
+
+
+def test_board_rejects_bad_token():
+    board, server, client, cid, token = make_stack()
+    bad = ClientCommunicator(board, cid, "stolen-token",
+                             channel_key=server.channel_key(cid),
+                             broadcast_key=server.broadcast_key())
+    with pytest.raises(PermissionError):
+        bad.post("runs/r/update/x", {"a": 1})
+    assert board.stats["rejected"] == 1
+    client.post("runs/r/update/x", {"a": 1})  # legit token fine
+    assert server.collect("runs/r/update/x", cid)["a"] == 1
+
+
+def test_pull_roundtrip_with_server_auth():
+    board, server, client, cid, token = make_stack()
+    server.publish("runs/r/job", {"rounds": 3}, client_id=cid)
+    got = client.fetch("runs/r/job")
+    assert got == {"rounds": 3}
+    # broadcast channel
+    server.publish("runs/r/status", {"phase": "collect"})
+    assert client.fetch("runs/r/status", broadcast=True)["phase"] == "collect"
+    # nothing there -> None (client polls; the server never pushes)
+    assert client.fetch("runs/r/missing") is None
+
+
+def test_client_detects_fake_server():
+    board, server, client, cid, token = make_stack()
+    fake = ServerCommunicator(board, b"x" * 32, server_id="evil")
+    # fake server re-keys the channel: decryption fails outright
+    fake.publish("runs/r/job", {"rounds": 666}, client_id=cid)
+    with pytest.raises(ValueError):
+        client.fetch("runs/r/job")
+    # fake server that somehow knows the channel key still lacks a valid cert
+    body = {"server_id": "evil", "cert": "deadbeef", "payload": {}}
+    board.put_server("runs/r/job2", crypto.encrypt(
+        server.channel_key(cid), pack(body)))
+    with pytest.raises(ValueError, match="certificate"):
+        client.fetch("runs/r/job2")
+
+
+def test_board_stores_only_ciphertext():
+    board, server, client, cid, token = make_stack()
+    secret = {"secret_value": 42}
+    client.post("runs/r/update/c", secret)
+    raw = board.get("runs/r/update/c")
+    assert b"secret_value" not in raw         # opaque to the coordinator

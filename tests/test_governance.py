@@ -1,0 +1,79 @@
+"""Governance Cockpit: proposals, voting, contracts, provenance (paper §VII)."""
+import pytest
+
+from repro.core.governance import DEFAULT_DECISIONS, GovernanceCockpit
+from repro.core.metadata import MetadataStore
+
+
+@pytest.fixture
+def cockpit():
+    return GovernanceCockpit(["alice", "bob", "carol"], MetadataStore())
+
+
+def test_unanimous_acceptance_finalizes(cockpit):
+    p = cockpit.propose("alice", "rounds", 7, rationale="short pilot")
+    cockpit.vote("bob", p.proposal_id, True)
+    assert p.status == "open"                 # carol hasn't voted
+    cockpit.vote("carol", p.proposal_id, True)
+    assert p.status == "accepted"
+    contract = cockpit.finalize()
+    assert contract.decisions["rounds"] == 7
+    # un-negotiated params fall back to defaults
+    assert contract.decisions["optimizer"] == DEFAULT_DECISIONS["optimizer"]
+
+
+def test_rejection_blocks_decision(cockpit):
+    p = cockpit.propose("alice", "lr", 1.0)
+    cockpit.vote("bob", p.proposal_id, False)
+    assert p.status == "rejected"
+    contract = cockpit.finalize()
+    assert contract.decisions["lr"] == DEFAULT_DECISIONS["lr"]
+
+
+def test_open_proposals_block_finalize(cockpit):
+    cockpit.propose("alice", "rounds", 3)
+    with pytest.raises(ValueError, match="open"):
+        cockpit.finalize()
+
+
+def test_supersede_on_renegotiation(cockpit):
+    p1 = cockpit.propose("alice", "rounds", 3)
+    for u in ("bob", "carol"):
+        cockpit.vote(u, p1.proposal_id, True)
+    p2 = cockpit.propose("bob", "rounds", 9)
+    for u in ("alice", "carol"):
+        cockpit.vote(u, p2.proposal_id, True)
+    assert p1.status == "superseded"
+    assert cockpit.finalize().decisions["rounds"] == 9
+
+
+def test_outsider_cannot_participate(cockpit):
+    with pytest.raises(PermissionError):
+        cockpit.propose("mallory", "rounds", 1)
+    p = cockpit.propose("alice", "rounds", 1)
+    with pytest.raises(PermissionError):
+        cockpit.vote("mallory", p.proposal_id, True)
+
+
+def test_provenance_recorded(cockpit):
+    p = cockpit.propose("alice", "rounds", 3)
+    cockpit.vote("bob", p.proposal_id, True)
+    cockpit.vote("carol", p.proposal_id, True)
+    cockpit.finalize()
+    md = cockpit.metadata
+    ops = [r["operation"] for r in md.query(kind="provenance")]
+    for expected in ("propose", "vote", "close_proposal",
+                     "finalize_contract"):
+        assert expected in ops
+    assert md.verify_chain()
+
+
+def test_contract_versioning(cockpit):
+    c1 = cockpit.finalize()
+    cockpit.request_new_negotiation("alice", "need more rounds")
+    p = cockpit.propose("alice", "rounds", 20)
+    for u in ("bob", "carol"):
+        cockpit.vote(u, p.proposal_id, True)
+    c2 = cockpit.finalize()
+    assert c2.version == c1.version + 1
+    assert c2.decisions["rounds"] == 20

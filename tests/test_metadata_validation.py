@@ -1,0 +1,80 @@
+"""Metadata store (provenance chain) + Data Validator + checkpointing."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, pytree_digest, save_checkpoint
+from repro.core.metadata import MetadataStore
+from repro.core.reporting import client_report, governance_report, run_report
+from repro.core.validation import (DataSchema, apply_preprocessing,
+                                   validate_stats)
+
+
+def test_chain_integrity_and_tamper_detection():
+    md = MetadataStore()
+    md.record_provenance("a", "op1", "s", "ok")
+    md.record_run_start("r1", {"arch": "x"})
+    md.record_round("r1", 0, {"loss": 1.0}, "digest0")
+    assert md.verify_chain()
+    md._records[1]["job"] = {"arch": "tampered"}
+    assert not md.verify_chain()
+
+
+def test_experiment_tracking_queries():
+    md = MetadataStore()
+    md.record_run_start("r1", {"arch": "x"})
+    for i in range(3):
+        md.record_round("r1", i, {"loss": 3.0 - i}, f"d{i}")
+    md.record_run_end("r1", "completed", "d2")
+    assert md.runs() == ["r1"]
+    hist = md.run_history("r1")
+    assert len(hist) == 5
+    rep = run_report(md, "r1")
+    assert rep["status"] == "completed"
+    assert rep["loss_curve"] == [3.0, 2.0, 1.0]
+    assert rep["final_digest"] == "d2"
+
+
+def test_validator():
+    schema = DataSchema(vocab=512, seq_len=32, min_examples=10,
+                        value_ranges=(("entropy", 0.5, 10.0),))
+    ok = validate_stats("c1", schema, {"vocab": 512, "seq_len": 32,
+                                       "n_examples": 100, "entropy": 4.0})
+    assert ok.ok
+    bad = validate_stats("c2", schema, {"vocab": 256, "seq_len": 32,
+                                        "n_examples": 5, "entropy": 0.1})
+    assert not bad.ok
+    assert len(bad.violations) == 3
+
+
+def test_preprocessing_ops():
+    batch = {"tokens": np.arange(100).reshape(2, 50).astype(np.int32)}
+    out = apply_preprocessing(batch, [{"op": "clip_vocab", "vocab": 40},
+                                      {"op": "truncate_seq", "seq_len": 10}])
+    assert out["tokens"].shape == (2, 10)
+    assert out["tokens"].max() == 39
+    with pytest.raises(ValueError):
+        apply_preprocessing(batch, [{"op": "nope"}])
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, np.float32).reshape(2, 3)
+            if False else np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.array([1, 2], np.int32)}}
+    path = str(tmp_path / "ckpt")
+    manifest = save_checkpoint(path, tree, metadata={"round": 3})
+    assert manifest["metadata"]["round"] == 3
+    out, m2 = load_checkpoint(path, tree)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    assert m2["digest"] == pytree_digest(tree)
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    tree = {"a": np.ones(4, np.float32)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree)
+    # corrupt payload
+    data = dict(np.load(path + ".npz"))
+    data["leaf_0"] = data["leaf_0"] + 1
+    np.savez(path + ".npz", **data)
+    with pytest.raises(ValueError, match="digest"):
+        load_checkpoint(path, tree)

@@ -1,0 +1,117 @@
+"""Optimizers (inner + outer), data pipeline, sharding rules."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import ForecastSiloDataset, make_silo_datasets
+from repro.optim import (adamw, apply_updates, clip_by_global_norm,
+                         cosine_schedule, fedadam, fedavgm, sgd)
+
+
+def quad_loss(params):
+    return jnp.sum(jnp.square(params["w"] - 3.0))
+
+
+@pytest.mark.parametrize("make_opt", [lambda: adamw(1e-1, weight_decay=0.0),
+                                      lambda: sgd(5e-2, momentum=0.9)])
+def test_optimizers_converge_on_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    for _ in range(150):
+        grads = jax.grad(quad_loss)(params)
+        updates, state, _ = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=1e-1)
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((3,), 100.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert float(norm) > 100
+    total = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.1, abs=1e-6)
+    assert float(lr(55)) < float(lr(20))
+
+
+def test_outer_optimizers_move_toward_aggregate():
+    g = {"w": np.zeros(4, np.float32)}
+    agg = {"w": np.full(4, 1.0, np.float32)}
+    for outer in (fedavgm(server_lr=0.5, momentum=0.0), fedadam(1e-1)):
+        state = outer.init(g)
+        params = g
+        for _ in range(40):
+            params, state = outer.step(params, agg, state)
+        assert np.all(np.asarray(params["w"]) > 0.2), outer.name
+
+
+def test_silo_datasets_non_iid_and_deterministic():
+    ds = make_silo_datasets(3, vocab=128, seq_len=16, seed=5, alpha=0.1)
+    b0 = ds[0].batch(4)["tokens"]
+    assert b0.shape == (4, 16) and b0.dtype == np.int32
+    # deterministic per silo
+    ds2 = make_silo_datasets(3, vocab=128, seq_len=16, seed=5, alpha=0.1)
+    np.testing.assert_array_equal(ds2[0].batch(4)["tokens"], b0)
+    # different silos have measurably different distributions
+    s0, s1 = ds[0].stats(), ds[1].stats()
+    assert s0["top_token"] != s1["top_token"] or \
+        abs(s0["entropy"] - s1["entropy"]) > 1e-3
+
+
+def test_forecast_dataset_shapes():
+    ds = ForecastSiloDataset("windco", seq_len=48, vocab=256, seed=1,
+                             n_steps=5_000)
+    b = ds.batch(3)
+    assert b["tokens"].shape == (3, 48)
+    assert b["tokens"].max() < 256
+    stats = ds.stats()
+    assert stats["seq_len"] == 48
+
+
+def test_sharding_rules_divisibility():
+    import os
+    # pure-spec test: fabricate a mesh-shape-like object
+    from repro.sharding.specs import _leaf_spec
+    from jax.sharding import PartitionSpec as P
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    class Leaf:
+        def __init__(self, shape): self.shape = shape; self.ndim = len(shape)
+
+    class KeyPath:
+        def __init__(self, key): self.key = key
+
+    mesh = FakeMesh()
+    # up-projection: out dim sharded model, in dim data
+    s = _leaf_spec((KeyPath("stack"), KeyPath("wq")), Leaf((42, 4096, 4096)),
+                   mesh)
+    assert s == P(None, "data", "model")
+    # down-projection: contract dim model
+    s = _leaf_spec((KeyPath("wo"),), Leaf((4096, 4096)), mesh)
+    assert s == P("model", "data")
+    # non-divisible dims fall back to replication
+    s = _leaf_spec((KeyPath("wq"),), Leaf((25, 100)), mesh)
+    assert s == P(None, None)
+    # embed: vocab-parallel only
+    s = _leaf_spec((KeyPath("embed"),), Leaf((256000, 3584)), mesh)
+    assert s == P("model", None)
+    # MoE expert stack: expert-parallel
+    s = _leaf_spec((KeyPath("moe"), KeyPath("w_gate")),
+                   Leaf((16, 64, 2048, 1024)), mesh)
+    assert s == P(None, "model", "data", None)
+    # 1D: replicated
+    s = _leaf_spec((KeyPath("norm_attn"),), Leaf((4096,)), mesh)
+    assert s == P(None)

@@ -1,0 +1,91 @@
+"""Hypothesis property tests over the system's invariants (deliverable c)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crypto, secure_agg
+from repro.core.aggregation import fedavg
+from repro.models.attention import cache_write
+
+COHORT_IDS = st.lists(
+    st.text(alphabet="abcdef0123456789", min_size=4, max_size=8),
+    min_size=2, max_size=5, unique=True)
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.binary(min_size=0, max_size=2048),
+       purpose=st.text(min_size=1, max_size=16))
+def test_crypto_roundtrip(data, purpose):
+    key = crypto.derive_key(b"master" * 6, purpose)
+    assert crypto.decrypt(key, crypto.encrypt(key, data)) == data
+    assert crypto.decrypt(key, crypto.encrypt(key, data,
+                                              compress=False)) == data
+
+
+@settings(max_examples=20, deadline=None)
+@given(cohort=COHORT_IDS,
+       vals=st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                     max_size=4),
+       scale=st.floats(0.1, 50.0))
+def test_pairwise_masks_always_cancel(cohort, vals, scale):
+    """Invariant: mean(masked updates) == mean(plain updates), any cohort."""
+    base = np.asarray(vals + [0.0], np.float32)
+    updates = [{"w": base + i} for i in range(len(cohort))]
+    masked = [secure_agg.mask_update(u, cid, cohort, b"s", scale=scale)
+              for u, cid in zip(updates, cohort)]
+    agg = secure_agg.aggregate_masked(masked)
+    expected = np.mean([u["w"] for u in updates], axis=0)
+    np.testing.assert_allclose(agg["w"], expected, atol=1e-3 * scale
+                               * len(cohort), rtol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 10_000))
+def test_fedavg_permutation_invariant_and_idempotent(n, seed):
+    rng = np.random.default_rng(seed)
+    ups = [{"w": rng.normal(size=(4,)).astype(np.float32)} for _ in range(n)]
+    w = rng.uniform(0.1, 1.0, n)
+    out1 = fedavg(ups, list(w))
+    perm = rng.permutation(n)
+    out2 = fedavg([ups[i] for i in perm], list(w[perm]))
+    np.testing.assert_allclose(np.asarray(out1["w"]),
+                               np.asarray(out2["w"]), atol=1e-5)
+    # aggregating identical updates is the identity
+    same = fedavg([ups[0]] * n)
+    np.testing.assert_allclose(np.asarray(same["w"]), ups[0]["w"], atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cache_len=st.integers(4, 16), n_writes=st.integers(1, 30),
+       seed=st.integers(0, 1000))
+def test_ring_cache_keeps_last_positions(cache_len, n_writes, seed):
+    """Invariant: after writing positions 0..n-1 one at a time, the cache
+    holds exactly the last min(n, cache_len) positions."""
+    rng = np.random.default_rng(seed)
+    cache = {"k": jnp.zeros((1, cache_len, 1, 2)),
+             "v": jnp.zeros((1, cache_len, 1, 2)),
+             "pos": jnp.full((1, cache_len), -1, jnp.int32)}
+    for t in range(n_writes):
+        k_new = jnp.asarray(rng.normal(size=(1, 1, 1, 2)), jnp.float32)
+        cache = cache_write(cache, k_new, k_new,
+                            jnp.full((1, 1), t, jnp.int32))
+    held = sorted(int(p) for p in np.asarray(cache["pos"])[0] if p >= 0)
+    expect = list(range(max(0, n_writes - cache_len), n_writes))
+    assert held == expect
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), trim=st.integers(1, 2))
+def test_trimmed_mean_bounded_by_extremes(seed, trim):
+    from repro.core.aggregation import trimmed_mean
+    rng = np.random.default_rng(seed)
+    n = 2 * trim + 3
+    ups = [{"w": rng.normal(size=(5,)).astype(np.float32)}
+           for _ in range(n)]
+    out = np.asarray(trimmed_mean(ups, trim=trim)["w"])
+    stack = np.stack([u["w"] for u in ups])
+    s = np.sort(stack, axis=0)
+    assert (out >= s[trim] - 1e-5).all()
+    assert (out <= s[-trim - 1] + 1e-5).all()

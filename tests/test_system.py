@@ -1,0 +1,126 @@
+"""End-to-end behaviour of the FL-APU system (paper lifecycle, §V-§VII).
+
+Covers: negotiation -> contract -> job -> validation -> secure-masked
+rounds -> outer optimizer -> deployment with personalization + decision
+maker -> monitoring -> inference; plus the failure paths (validation pause,
+forced deploy, hyperparameter repeat).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Consortium, DataSchema
+from repro.core.reporting import governance_report, run_report
+from repro.data import make_silo_datasets
+
+ORGS = ["windco", "solarx", "gridpower"]
+
+
+def run_consortium(decisions_extra=None, n_orgs=3, seed=0, bad_client=False):
+    con = Consortium(ORGS[:n_orgs], seed=seed)
+    schema = DataSchema(vocab=512, seq_len=32)
+    decisions = {
+        "arch": "fedforecast-100m", "rounds": 2, "local_steps": 2,
+        "batch_size": 2, "lr": 1e-3, "data_schema": schema.to_dict(),
+    }
+    decisions.update(decisions_extra or {})
+    contract = con.negotiate(decisions)
+    job = con.server.job_creator.from_contract(contract)
+    datasets = make_silo_datasets(n_orgs, vocab=512, seq_len=32, seed=seed)
+    if bad_client:
+        datasets[1] = type(datasets[1])(
+            "silo-bad", 512, 16, seed * 1000 + 1)   # violates seq_len=32
+    run_id = con.start(job, datasets)
+    phase = con.run_to_completion()
+    return con, run_id, phase
+
+
+def test_full_lifecycle_secure():
+    con, run_id, phase = run_consortium()
+    assert phase == "done"
+    rep = run_report(con.server.metadata, run_id)
+    assert rep["n_rounds"] == 2
+    assert all(np.isfinite(l) for l in rep["loss_curve"])
+    # every round tracked a model digest + contributions
+    for r in rep["rounds"]:
+        assert len(r["model_digest"]) == 64
+        assert abs(sum(r["contributions"]["data_size"].values()) - 1) < 1e-6
+    # clients deployed after personalization + decision maker
+    for node in con.nodes:
+        assert node.deployed_params is not None
+    # governance fully traced, chain intact
+    assert len(governance_report(con.server.metadata)) > 10
+    assert con.server.metadata.verify_chain()
+
+
+def test_inference_after_deploy():
+    con, run_id, phase = run_consortium()
+    node = con.nodes[0]
+    prompts = node.dataset.batch(2)["tokens"]
+    preds = node.predict(prompts, n_steps=3)
+    assert preds.shape == (2, 3)
+    assert (preds >= 0).all() and (preds < 512).all()
+
+
+def test_validation_failure_pauses_run():
+    con, run_id, phase = run_consortium(bad_client=True)
+    assert phase == "paused"
+    assert "seq_len" in con.server.run.pause_reason
+    # the violating client is identified in the provenance trail
+    viol = [r for r in con.server.metadata.query(kind="provenance")
+            if r["operation"] == "validate_data"
+            and r["outcome"] == "violation"]
+    assert len(viol) == 1
+    # SAAM 39: client admins were notified through the status resource
+    assert any("paused" in n for node in con.nodes
+               for n in node.notifications)
+
+
+def test_unsecure_mode_uses_weighted_fedavg():
+    con, run_id, phase = run_consortium({"secure_aggregation": False})
+    assert phase == "done"
+    rep = run_report(con.server.metadata, run_id)
+    assert rep["rounds"][0]["contributions"]["update_norm"]
+
+
+def test_robust_aggregation_strategies():
+    for agg in ("trimmed_mean", "median"):
+        con, run_id, phase = run_consortium(
+            {"secure_aggregation": False, "aggregation": agg,
+             "rounds": 1}, n_orgs=3)
+        assert phase == "done", agg
+
+
+def test_hyperparameter_repeat():
+    con, run_id, phase = run_consortium({
+        "rounds": 1,
+        "hyperparameter_search": {"parameter": "lr",
+                                  "values": [1e-3, 3e-3]},
+    })
+    assert phase == "done"
+    hist = con.server.run.history
+    assert {h["hp_index"] for h in hist} == {0, 1}
+
+
+def test_admin_force_deploy():
+    con, run_id, phase = run_consortium()
+    digest = con.server.run.history[0]["digest"]     # an older model
+    con.server.admin_force_deploy("server-admin", digest)
+    rel = con.nodes[0].comm.fetch(f"runs/{run_id}/release", broadcast=True)
+    assert rel["digest"] == digest
+    assert rel["forced_by"] == "server-admin"
+
+
+def test_outer_optimizers():
+    for outer in ("fedavgm", "fedadam"):
+        con, run_id, phase = run_consortium(
+            {"outer_optimizer": outer, "rounds": 2})
+        assert phase == "done", outer
+
+
+def test_server_monitoring_snapshot():
+    con, run_id, phase = run_consortium()
+    snap = con.server.monitor()
+    assert snap["phase"] == "done"
+    assert snap["models_stored"] >= 3
+    assert snap["board"]["posts"] > 10
+    assert len(snap["registered_clients"]) == 3
