@@ -1,12 +1,17 @@
 """Micro-benchmarks for the FL-APU control/data plane components."""
 from __future__ import annotations
 
+import hashlib
+import json
+import os
 import time
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
 def _time_us(fn, *args, n=20, warmup=2, **kw):
@@ -49,6 +54,118 @@ def bench_secure_masking(rows):
     masked = [secure_agg.mask_update(u, c, cohort, b"s") for c in cohort]
     us = _time_us(secure_agg.aggregate_masked, masked, n=5)
     rows.append(("secure_agg.aggregate_masked", us, "masks cancel"))
+
+
+# ---------------------------------------------------------------------------
+# masked-round benchmark: packed data plane vs the seed numpy masking
+# ---------------------------------------------------------------------------
+def _seed_mask_update_numpy(update, client_id, cohort, pair_secret,
+                            scale=1e-2):
+    """Frozen copy of the pre-packed-plane implementation (per-leaf,
+    per-pair numpy loop) — kept here as the benchmark baseline only."""
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    masked = []
+    for idx, leaf in enumerate(leaves):
+        arr = np.asarray(leaf, np.float32).copy()
+        for other in cohort:
+            if other == client_id:
+                continue
+            lo, hi = sorted([client_id, other])
+            h = hashlib.sha256(
+                pair_secret + f"{lo}|{hi}|{idx}".encode()).digest()
+            rng = np.random.default_rng(int.from_bytes(h[:8], "little"))
+            mask = rng.standard_normal(arr.shape).astype(np.float32) * scale
+            sign = 1.0 if client_id < other else -1.0
+            arr += sign * mask
+        masked.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, masked)
+
+
+def _time_s(fn, *args, n=1, warmup=1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args, **kw)
+        if hasattr(out, "block_until_ready"):
+            out.block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def bench_masked_round(rows, *, n_params=10_000_000,
+                       cohorts=(4, 16, 64), seed_baseline_cohort=16,
+                       write_json=True):
+    """Packed secure-agg data plane at >=10M params, cohorts 4/16/64.
+
+    Per cohort: one client's full-buffer masking pass (the client hot path,
+    cost ~ (cohort-1) PRG draws over the buffer) and the server-side
+    (N, T) -> (T,) reduction through the kernel ops path. The seed numpy
+    masking is replayed once at ``seed_baseline_cohort`` for the speedup
+    record written to BENCH_secure_agg.json.
+    """
+    from repro.core import secure_agg
+
+    if seed_baseline_cohort not in cohorts:
+        raise ValueError(
+            f"seed_baseline_cohort {seed_baseline_cohort} must be one of "
+            f"cohorts {cohorts} (the speedup compares like for like)")
+    report = {"model_params": n_params, "cohorts": {},
+              "seed_baseline": {}, "notes": {
+                  "mask_s": "one client masking one packed buffer",
+                  "aggregate_s": "server (N,T)->(T,) reduction, "
+                                 "kernel ops path (jnp oracle fallback on "
+                                 "CPU interpret mode)"}}
+    rng = np.random.default_rng(0)
+    buf = rng.standard_normal(n_params, dtype=np.float32)
+
+    # --- seed baseline: per-leaf per-pair numpy loops, 10 x 1M leaves ----
+    cohort = [f"c{i:02d}" for i in range(seed_baseline_cohort)]
+    tree = {f"w{i}": buf[i * 1_000_000:(i + 1) * 1_000_000].copy()
+            for i in range(10)}
+    t_seed = _time_s(_seed_mask_update_numpy, tree, cohort[0], cohort,
+                     b"bench", n=1, warmup=0)
+    report["seed_baseline"] = {"cohort": seed_baseline_cohort,
+                               "numpy_mask_update_s": t_seed}
+    rows.append((f"secure_agg.seed_numpy_mask_10M_c{seed_baseline_cohort}",
+                 t_seed * 1e6, "pre-packed-plane baseline"))
+
+    for c in cohorts:
+        cohort = [f"c{i:02d}" for i in range(c)]
+        jbuf = jnp.asarray(buf)
+        t_mask = _time_s(
+            secure_agg.mask_packed, jbuf, cohort[0], cohort, b"bench", n=1)
+        # aggregation timing: values don't affect cost, random rows
+        # suffice; f32 draws avoid a transient (c, T) f64 (5GB at c=64)
+        stacked = jnp.asarray(
+            rng.standard_normal((c, n_params), dtype=np.float32))
+        t_agg = _time_s(secure_agg.aggregate_masked_packed, stacked, n=1)
+        del stacked
+        report["cohorts"][str(c)] = {"mask_s": t_mask, "aggregate_s": t_agg}
+        rows.append((f"secure_agg.packed_mask_10M_c{c}", t_mask * 1e6, ""))
+        rows.append((f"secure_agg.packed_aggregate_10M_c{c}", t_agg * 1e6,
+                     ""))
+
+    # --- telescoping sanity at cohort 4 on the full 10M buffer ----------
+    cohort4 = [f"c{i}" for i in range(4)]
+    masked = [np.asarray(secure_agg.mask_packed(jnp.asarray(buf), cid,
+                                                cohort4, b"bench"))
+              for cid in cohort4]
+    agg = np.asarray(secure_agg.aggregate_masked_packed(np.stack(masked)))
+    err = float(np.abs(agg - buf).max())
+    report["telescoping_max_abs_err_cohort4"] = err
+    assert err < 1e-4, f"masks failed to cancel: {err}"
+
+    base_mask = report["cohorts"][str(seed_baseline_cohort)]["mask_s"]
+    report["speedup_vs_seed_numpy_cohort16"] = t_seed / base_mask
+    rows.append(("secure_agg.packed_vs_seed_speedup_c16",
+                 t_seed / base_mask, "x faster (mask path)"))
+    if write_json:
+        path = os.path.join(_REPO_ROOT, "BENCH_secure_agg.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
 
 
 def bench_communicator(rows):
@@ -114,3 +231,10 @@ def bench_fl_round(rows):
     rows.append(("fl_round.e2e_1round_2silos", total * 1e6,
                  f"phase={phase} posts={posts} "
                  f"bytes={con.server.board.stats['bytes_posted']/1e6:.1f}MB"))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+    _rows = []
+    print(json.dumps(bench_masked_round(_rows), indent=2))

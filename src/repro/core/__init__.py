@@ -8,7 +8,8 @@ MetadataStore, reporting.
 Client containers (paper §VI): FLClientNode (FL Pipeline + Client Model
 Deployer + Inference Manager + Model Monitoring), ClientCommunicator.
 """
-from repro.core.aggregation import AGGREGATORS, aggregate  # noqa: F401
+from repro.core.aggregation import (AGGREGATORS, aggregate,
+                                    aggregate_packed)  # noqa: F401
 from repro.core.client import ClientConfig, FLClientNode  # noqa: F401
 from repro.core.clients import ClientManagement  # noqa: F401
 from repro.core.communicator import (ClientCommunicator, MessageBoard,
@@ -17,6 +18,8 @@ from repro.core.governance import (DEFAULT_DECISIONS, GovernanceCockpit,
                                    GovernanceContract)  # noqa: F401
 from repro.core.jobs import FLJob, JobCreator  # noqa: F401
 from repro.core.metadata import MetadataStore  # noqa: F401
+from repro.core.packing import (PackedLayout, pack_many, pack_pytree,
+                                unpack_pytree)  # noqa: F401
 from repro.core.server import FLServer, ModelStore  # noqa: F401
 from repro.core.simulation import Consortium  # noqa: F401
 from repro.core.validation import (DataSchema, ValidationResult,

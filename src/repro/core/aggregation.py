@@ -1,6 +1,14 @@
 """Model Aggregator strategies (paper §V; robust options per [8]).
 
-Operate on lists of client parameter pytrees (host-level control plane).
+Two planes:
+  * pytree plane — lists of client parameter pytrees (host-level control
+    plane; small cohorts, readability first).
+  * packed plane — an (N, T) fp32 matrix of flattened client updates
+    (``repro.core.packing``); ``aggregate_packed`` reduces the whole
+    cohort in one pass (FedAvg through the fused Pallas combine) and
+    unpacks into the parameter structure exactly once, after reduction.
+    This is the path masked rounds use (DESIGN.md §Packed data plane).
+
 The TPU data plane equivalent is ``repro.training.steps.fedavg_pod_params``
 (collective over the pod axis) and the fused Pallas ``secure_agg`` kernel.
 """
@@ -12,6 +20,9 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.packing import PackedLayout, as_matrix, unpack_pytree
+from repro.kernels.secure_agg.ops import masked_sum
 
 
 def _stack(updates: Sequence):
@@ -60,3 +71,41 @@ def aggregate(name: str, updates: Sequence,
     if name == "fedavg":
         return fn(updates, weights)
     return fn(updates, **kw)
+
+
+# ---------------------------------------------------------------------------
+# packed plane
+# ---------------------------------------------------------------------------
+def aggregate_packed(name: str, buffers,
+                     weights: Optional[Sequence[float]] = None, *,
+                     layout: Optional[PackedLayout] = None,
+                     interpret: Optional[bool] = None, **kw):
+    """Aggregate (N, T) packed fp32 client buffers in one reduction.
+
+    ``buffers`` is an (N, T) array or a list of (T,) buffers. FedAvg goes
+    through the fused Pallas combine (jnp oracle in interpret mode) with
+    weights *normalized* to a weighted mean (masked rounds instead use
+    ``secure_agg.aggregate_masked_packed``, whose weights stay raw so
+    pre-scaled protocols can sum); the robust strategies sort/median on
+    the stacked matrix directly. If ``layout`` is given the reduced (T,)
+    buffer is unpacked into the parameter pytree — the single unpack of
+    the round.
+    """
+    x = as_matrix(buffers)
+    n = x.shape[0]
+    if name == "fedavg":
+        w = (jnp.full((n,), 1.0 / n, jnp.float32) if weights is None
+             else jnp.asarray(weights, jnp.float32))
+        w = w / jnp.sum(w)
+        out = masked_sum(x, w, interpret=interpret)
+    elif name == "trimmed_mean":
+        trim = kw.get("trim", 1)
+        if 2 * trim >= n:
+            raise ValueError("trim too large for cohort size")
+        s = jnp.sort(x, axis=0)
+        out = jnp.mean(s[trim:n - trim], axis=0)
+    elif name == "median":
+        out = jnp.median(x, axis=0)
+    else:
+        raise KeyError(name)
+    return unpack_pytree(out, layout) if layout is not None else out

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.checkpoint import pytree_digest
 from repro.core import secure_agg
 from repro.core.communicator import ClientCommunicator
+from repro.core.packing import pack_pytree
 from repro.core.jobs import FLJob
 from repro.core.metadata import MetadataStore
 from repro.core.validation import apply_preprocessing
@@ -164,13 +165,19 @@ class FLClientNode:
             params, opt_state, metrics = train_step(params, opt_state, batch)
             loss = float(metrics["loss"])
         n_examples = self.job.local_steps * self.job.batch_size
-        out_params = jax.tree.map(np.asarray, params)
         if self.job.secure_aggregation:
-            out_params = secure_agg.mask_update(
-                out_params, self.client_id, self.cohort, self.pair_secret)
-        self.comm.post(f"{base}/update/{self.client_id}",
-                       {"params": out_params, "n_examples": n_examples,
-                        "train_loss": loss})
+            # packed data plane: flatten once, mask the whole buffer in one
+            # vectorized pass, post the (T,) fp32 buffer — the server never
+            # sees per-tensor structure of the masked update
+            buf, _ = pack_pytree(params)
+            masked = secure_agg.mask_packed(
+                buf, self.client_id, self.cohort, self.pair_secret)
+            payload = {"packed": np.asarray(masked),
+                       "n_examples": n_examples, "train_loss": loss}
+        else:
+            payload = {"params": jax.tree.map(np.asarray, params),
+                       "n_examples": n_examples, "train_loss": loss}
+        self.comm.post(f"{base}/update/{self.client_id}", payload)
         self.round_done, self.hp_seen = rnd, hp
         self.metadata.record_provenance(
             actor=self.client_id, operation="local_train",

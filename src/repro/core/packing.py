@@ -1,0 +1,122 @@
+"""Packed parameter plane: pytree <-> one contiguous fp32 buffer.
+
+The secure-aggregation data plane (DESIGN.md §Packed data plane) operates on
+a single flat fp32 vector per client instead of a pytree of leaves: masking
+is one vectorized pass over the buffer, the server-side reduction is one
+(N, T) weighted sum through the fused Pallas kernel, and the result is
+unpacked back into the parameter structure exactly once, after the
+reduction.
+
+``PackedLayout`` is the static descriptor of that buffer: per-leaf shapes,
+dtypes and offsets plus the treedef. Both endpoints derive the same layout
+from their own copy of the model parameters (the structure is fixed by the
+negotiated architecture), so the layout itself never crosses the wire —
+only the (T,) fp32 buffer does.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    """Static shape/dtype of one pytree leaf inside the packed buffer."""
+    shape: Tuple[int, ...]
+    dtype: str
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+
+
+@dataclass(frozen=True)
+class PackedLayout:
+    """Static layout descriptor for a packed pytree buffer."""
+    treedef: Any
+    leaves: Tuple[LeafSpec, ...]
+    total_size: int
+
+    @classmethod
+    def for_tree(cls, tree) -> "PackedLayout":
+        flat, treedef = jax.tree_util.tree_flatten(tree)
+        specs: List[LeafSpec] = []
+        off = 0
+        for leaf in flat:
+            arr = jnp.asarray(leaf)
+            spec = LeafSpec(tuple(arr.shape), str(arr.dtype), off)
+            specs.append(spec)
+            off += spec.size
+        return cls(treedef, tuple(specs), off)
+
+    def to_dict(self) -> dict:
+        """Wire/debug form (treedef is reconstructed via ``for_tree`` on the
+        receiving side; this dict only carries the numeric layout)."""
+        return {"total_size": self.total_size,
+                "leaves": [{"shape": list(s.shape), "dtype": s.dtype,
+                            "offset": s.offset} for s in self.leaves]}
+
+
+def pack_pytree(tree, layout: PackedLayout = None):
+    """Flatten ``tree`` into one contiguous fp32 buffer.
+
+    Returns ``(buf, layout)`` where ``buf`` is a (T,) float32 jnp array and
+    ``layout`` the static descriptor needed to invert the operation.
+    """
+    if layout is None:
+        layout = PackedLayout.for_tree(tree)
+    flat = jax.tree_util.tree_leaves(tree)
+    if len(flat) != len(layout.leaves):
+        raise ValueError(
+            f"tree has {len(flat)} leaves, layout expects "
+            f"{len(layout.leaves)}")
+    parts = []
+    for leaf, spec in zip(flat, layout.leaves):
+        arr = jnp.asarray(leaf)
+        if tuple(arr.shape) != spec.shape:
+            raise ValueError(
+                f"leaf shape {tuple(arr.shape)} != layout {spec.shape}")
+        parts.append(jnp.ravel(arr).astype(jnp.float32))
+    if not parts:
+        return jnp.zeros((0,), jnp.float32), layout
+    return jnp.concatenate(parts), layout
+
+
+def unpack_pytree(buf, layout: PackedLayout):
+    """Invert ``pack_pytree``: slice the buffer back into leaves with their
+    original shapes and dtypes and rebuild the tree structure."""
+    buf = jnp.asarray(buf).reshape(-1)
+    if buf.shape[0] != layout.total_size:
+        raise ValueError(
+            f"buffer has {buf.shape[0]} elements, layout expects "
+            f"{layout.total_size}")
+    leaves = []
+    for spec in layout.leaves:
+        chunk = jax.lax.dynamic_slice_in_dim(buf, spec.offset, spec.size)
+        leaves.append(chunk.reshape(spec.shape).astype(spec.dtype))
+    return jax.tree_util.tree_unflatten(layout.treedef, leaves)
+
+
+def as_matrix(buffers):
+    """Coerce a list of (T,) packed buffers (or an (N, T) array) into one
+    (N, T) fp32 matrix — the layout every packed reduction consumes."""
+    if hasattr(buffers, "ndim"):
+        return jnp.asarray(buffers, jnp.float32)
+    return jnp.stack([jnp.asarray(b, jnp.float32) for b in buffers])
+
+
+def pack_many(trees: Sequence, layout: PackedLayout = None):
+    """Pack N same-structure pytrees into one (N, T) fp32 matrix — the
+    server-side collect layout the aggregation kernel consumes."""
+    if not trees:
+        raise ValueError("no trees to pack")
+    if layout is None:
+        layout = PackedLayout.for_tree(trees[0])
+    bufs = [pack_pytree(t, layout)[0] for t in trees]
+    return jnp.stack(bufs), layout

@@ -3,9 +3,33 @@
 Bonawitz-style: every *pair* of clients (i, j) derives a shared mask from a
 pairwise secret; client i adds the mask, client j subtracts it, so the sum
 over the full cohort telescopes to the true sum while every individual
-update the server sees is uniformly masked. This preserves FL-APU's privacy
-property — "clients should not trust the server" — without homomorphic
-encryption (no offline HE library; same architectural seam, see DESIGN.md).
+update the server sees is masked. This preserves FL-APU's privacy property
+— "clients should not trust the server" — without homomorphic encryption
+(no offline HE library; same architectural seam, see DESIGN.md).
+
+Packed data plane (DESIGN.md §Packed data plane): masking operates on one
+contiguous fp32 buffer per client (``repro.core.packing``), not on a pytree
+of leaves. All pairwise masks for the whole buffer are derived in a single
+jit-compiled pass: the per-pair loop is unrolled at trace time so XLA fuses
+every pair's counter-keyed PRG stream and the accumulate into ONE traversal
+of the buffer — no (pairs, T) intermediate ever materializes. The
+server-side reduction is one (N, T) weighted sum routed through the fused
+Pallas kernel in ``repro.kernels.secure_agg`` (jnp oracle as the
+interpret-mode fallback). The pytree-level ``mask_update`` /
+``aggregate_masked`` entry points survive as thin pack -> packed-op ->
+unpack wrappers.
+
+Masks are uniform with standard deviation ``scale`` (range
+``scale * [-sqrt(3), sqrt(3))`` — same per-pair mask std as the seed's
+gaussian masks): per pair, a keyed integer hash (two rounds of the
+lowbias32 mixer over ``counter ^ key``) is bit-twiddled into the f32
+mantissa — one uint32 per element, fully vectorizable, ~30x faster than
+the old per-leaf numpy loop on CPU hosts (BENCH_secure_agg.json). Like the seed's PCG64 this is a statistical PRG,
+not a cryptographic one; ``prg="threefry"`` switches the mask stream to
+``jax.random`` counter-based threefry at ~5x the cost. Cancellation is
+exact in real arithmetic either way (both endpoints of a pair generate
+bit-identical masks from the shared key), so the cohort sum matches the
+plain sum to fp32 accumulation error.
 
 Cross-silo cohorts are small and reliable (no dropout handling needed — the
 paper's own setting), so the full secret-sharing recovery protocol is out of
@@ -14,46 +38,142 @@ scope.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Sequence
-
-import numpy as np
+from functools import partial
+from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
+
+from repro.core.packing import as_matrix, pack_many, pack_pytree, \
+    unpack_pytree
+from repro.kernels.secure_agg.ops import masked_sum
+
+DEFAULT_SCALE = 1e-2
 
 
-def _pair_seed(secret: bytes, i: str, j: str, leaf_idx: int) -> int:
+def _pair_seed(secret: bytes, i: str, j: str) -> int:
     lo, hi = sorted([i, j])
-    h = hashlib.sha256(secret + f"{lo}|{hi}|{leaf_idx}".encode()).digest()
-    return int.from_bytes(h[:8], "little")
+    h = hashlib.sha256(secret + f"{lo}|{hi}".encode()).digest()
+    return int.from_bytes(h[:8], "little") & (2 ** 63 - 1)
 
 
-def mask_update(update, client_id: str, cohort: Sequence[str],
-                pair_secret: bytes, scale: float = 1e-2):
-    """Add pairwise-cancelling noise to each leaf of ``update``."""
-    leaves, treedef = jax.tree_util.tree_flatten(update)
-    masked = []
-    for idx, leaf in enumerate(leaves):
-        arr = np.asarray(leaf, np.float32).copy()
-        for other in cohort:
-            if other == client_id:
-                continue
-            rng = np.random.default_rng(
-                _pair_seed(pair_secret, client_id, other, idx))
-            mask = rng.standard_normal(arr.shape).astype(np.float32) * scale
-            sign = 1.0 if client_id < other else -1.0
-            arr += sign * mask
-        masked.append(arr)
-    return jax.tree_util.tree_unflatten(treedef, masked)
+def pair_keys(client_id: str, cohort: Sequence[str], pair_secret: bytes):
+    """PRNG keys + signs for every pair (client_id, other) in the cohort.
 
-
-def aggregate_masked(masked_updates: Sequence, weights=None):
-    """Uniform-weight sum/mean of masked updates — masks cancel exactly.
-
-    NOTE pairwise masking only telescopes under *equal* weights; for
-    weighted FedAvg clients pre-scale their update by their weight before
-    masking (handled by the caller).
+    Returns ``(keys, signs)``: keys is a (P, 2) uint32 array — per peer,
+    the two 32-bit words of the shared pair key (also a valid raw threefry
+    key); both endpoints derive the identical key from the sorted pair.
+    signs is (P,) f32 with +1 where ``client_id`` is the lexicographically
+    smaller endpoint and -1 otherwise. O(cohort) host hashing —
+    independent of model size.
     """
-    n = len(masked_updates)
-    stacked = jax.tree_util.tree_map(lambda *xs: np.stack(xs),
-                                     *masked_updates)
-    return jax.tree_util.tree_map(lambda s: s.sum(0) / n, stacked)
+    others = [c for c in cohort if c != client_id]
+    if not others:
+        return (jnp.zeros((0, 2), jnp.uint32), jnp.zeros((0,), jnp.float32))
+    keys = jnp.stack([jax.random.PRNGKey(_pair_seed(pair_secret, client_id,
+                                                    other))
+                      for other in others])
+    signs = jnp.asarray([1.0 if client_id < other else -1.0
+                         for other in others], jnp.float32)
+    return keys, signs
+
+
+def _mix32(x):
+    """lowbias32 integer mixer (Wellons) — full avalanche per round."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+_UNIT_STD = 3.4641016  # sqrt(12): scales uniform [-0.5, 0.5) to unit std
+
+
+def _uniform_from_bits(bits):
+    """uint32 -> f32 uniform with zero mean and *unit standard deviation*
+    (range [-sqrt(3), sqrt(3))): top 23 bits into the mantissa of [1, 2),
+    minus 1.5, times sqrt(12). Unit std keeps mask strength at parity with
+    the seed's gaussian masks for the same ``scale``. Exactly reproducible:
+    both endpoints of a pair produce bit-identical values."""
+    return (jax.lax.bitcast_convert_type(
+        (bits >> 9) | jnp.uint32(0x3F800000), jnp.float32)
+        - 1.5) * jnp.float32(_UNIT_STD)
+
+
+@partial(jax.jit, static_argnames=("prg",))
+def _apply_masks(buf, keys, signs, scale, *, prg: str = "fast"):
+    """buf: (T,) f32; keys: (P, 2) uint32; signs: (P,) -> masked (T,) f32.
+
+    ``prg="fast"`` (default): the pair loop is unrolled at trace time, so
+    XLA fuses all P keyed-hash streams and the accumulation into one pass
+    over the buffer — one acc read/write total, no (P, T) intermediate.
+    ``prg="threefry"``: ``jax.random`` counter-based threefry per pair via
+    ``lax.scan`` (cryptographic stream, ~5x slower on CPU). Memory stays
+    O(T) regardless of cohort size on both paths.
+    """
+    T = buf.shape[0]
+    acc = buf.astype(jnp.float32)
+    if prg == "threefry":
+        def body(acc, pair):
+            key, sign = pair
+            bits = jax.random.bits(key, (T,), jnp.uint32)
+            return acc + (sign * scale) * _uniform_from_bits(bits), None
+        out, _ = jax.lax.scan(body, acc, (keys, signs))
+        return out
+    idx = jax.lax.iota(jnp.uint32, T)
+    for p in range(keys.shape[0]):
+        bits = _mix32(_mix32(idx ^ keys[p, 0]) + keys[p, 1])
+        acc = acc + (signs[p] * scale) * _uniform_from_bits(bits)
+    return acc
+
+
+def mask_packed(buf, client_id: str, cohort: Sequence[str],
+                pair_secret: bytes, scale: float = DEFAULT_SCALE,
+                prg: str = "fast"):
+    """Add all pairwise-cancelling masks to a packed (T,) fp32 buffer."""
+    keys, signs = pair_keys(client_id, cohort, pair_secret)
+    return _apply_masks(jnp.asarray(buf, jnp.float32), keys, signs,
+                        jnp.float32(scale), prg=prg)
+
+
+def aggregate_masked_packed(buffers, weights: Optional[Sequence[float]]
+                            = None, *, interpret: bool = None):
+    """Combine (N, T) packed masked buffers into the (T,) cohort mean.
+
+    Pairwise masking only telescopes under *equal* weights; for weighted
+    FedAvg clients pre-scale their update by their weight before masking
+    (handled by the caller). ``weights`` therefore defaults to the uniform
+    mean and is exposed only for pre-scaled protocols — unlike
+    ``aggregation.aggregate_packed`` it is NOT normalized, so pre-scaled
+    sums stay sums. Routed through the fused Pallas combine (jnp oracle in
+    interpret mode).
+    """
+    x = as_matrix(buffers)
+    n = x.shape[0]
+    w = (jnp.full((n,), 1.0 / n, jnp.float32) if weights is None
+         else jnp.asarray(weights, jnp.float32))
+    return masked_sum(x, w, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level compatibility wrappers (pack -> packed op -> unpack)
+# ---------------------------------------------------------------------------
+def mask_update(update, client_id: str, cohort: Sequence[str],
+                pair_secret: bytes, scale: float = DEFAULT_SCALE):
+    """Mask a parameter pytree: one pack, one vectorized masking pass."""
+    buf, layout = pack_pytree(update)
+    return unpack_pytree(
+        mask_packed(buf, client_id, cohort, pair_secret, scale), layout)
+
+
+def aggregate_masked(masked_updates: Sequence, *, interpret: bool = None):
+    """Uniform mean of masked pytrees — masks cancel exactly.
+
+    Packs the cohort into one (N, T) matrix, reduces through the kernel
+    path and unpacks once.
+    """
+    stacked, layout = pack_many(masked_updates)
+    mean = aggregate_masked_packed(stacked, interpret=interpret)
+    return unpack_pytree(mean, layout)

@@ -25,6 +25,7 @@ import jax
 from repro.checkpoint import pytree_digest
 from repro.core import secure_agg
 from repro.core.aggregation import aggregate
+from repro.core.packing import PackedLayout, unpack_pytree
 from repro.core.clients import ClientManagement
 from repro.core.communicator import MessageBoard, ServerCommunicator
 from repro.core.contribution import (data_size_contribution,
@@ -211,7 +212,11 @@ class FLServer:
             msg = self.comm.collect(f"{base}/update/{cid}", cid)
             if msg is None:
                 return                       # keep polling
-            updates[cid] = msg["params"]
+            # masked rounds post one packed fp32 buffer, not a pytree;
+            # key by the job's protocol so a mismatched client fails loudly
+            # here at the collect boundary
+            updates[cid] = (msg["packed"] if r.job.secure_aggregation
+                            else msg["params"])
             sizes[cid] = msg["n_examples"]
             losses[cid] = msg["train_loss"]
         self._aggregate_and_advance(updates, sizes, losses)
@@ -221,14 +226,19 @@ class FLServer:
         job = r.job
         cids = sorted(updates)
         ups = [updates[c] for c in cids]
+        old_params = self.store.get(r.global_digest)
         if job.secure_aggregation:
-            # masked updates: only the uniform mean telescopes the masks away
-            new_global = secure_agg.aggregate_masked(ups)
+            # packed data plane: masked (T,) buffers -> one fused reduction
+            # through the Pallas combine, then a single unpack into the
+            # parameter structure (masks only telescope in the uniform mean)
+            layout = PackedLayout.for_tree(old_params)
+            stacked = np.stack([np.asarray(u, np.float32) for u in ups])
+            new_global = unpack_pytree(
+                secure_agg.aggregate_masked_packed(stacked), layout)
         else:
             weights = ([sizes[c] for c in cids]
                        if job.aggregation == "fedavg" else None)
             new_global = aggregate(job.aggregation, ups, weights)
-        old_params = self.store.get(r.global_digest)
         # outer (server) optimizer step — FedOpt family
         from repro.optim import OUTER_REGISTRY
         if not hasattr(r, "_outer"):

@@ -26,17 +26,14 @@ def _combine_kernel(q_ref, ws_ref, o_ref):
     o_ref[...] = jnp.dot(ws_ref[...], q, preferred_element_type=jnp.float32)
 
 
-def secure_agg_combine_flat(q, scales, weights, *, bt: int = DEFAULT_BT,
-                            interpret: bool = True):
-    """q: (N, T) int8; scales/weights: (N,) f32 -> (T,) f32."""
+def _combine_call(q, ws, *, bt: int, interpret: bool):
+    """Shared pallas_call: (N, T) rows x (1, N) row weights -> (T,) f32."""
     N, T = q.shape
     bt = min(bt, T)
     pad = (-T) % bt
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad)))
     Tp = T + pad
-    ws = (weights.astype(jnp.float32)
-          * scales.astype(jnp.float32)).reshape(1, N)
     out = pl.pallas_call(
         _combine_kernel,
         grid=(Tp // bt,),
@@ -49,3 +46,27 @@ def secure_agg_combine_flat(q, scales, weights, *, bt: int = DEFAULT_BT,
         interpret=interpret,
     )(q, ws)
     return out[0, :T]
+
+
+def secure_agg_combine_flat(q, scales, weights, *, bt: int = DEFAULT_BT,
+                            interpret: bool = True):
+    """q: (N, T) int8; scales/weights: (N,) f32 -> (T,) f32."""
+    N = q.shape[0]
+    ws = (weights.astype(jnp.float32)
+          * scales.astype(jnp.float32)).reshape(1, N)
+    return _combine_call(q, ws, bt=bt, interpret=interpret)
+
+
+def masked_sum_flat(x, weights, *, bt: int = DEFAULT_BT,
+                    interpret: bool = True):
+    """Full-precision combine for the packed secure-agg data plane.
+
+    x: (N, T) f32 pairwise-masked packed updates; weights: (N,) f32 ->
+    (T,) f32 weighted sum. Same (1, N) x (N, BT) MXU matmul as the int8
+    path, minus the dequant — masks must cancel bit-for-bit up to fp32
+    accumulation order, so the masked plane stays in f32 end to end.
+    """
+    N = x.shape[0]
+    ws = weights.astype(jnp.float32).reshape(1, N)
+    return _combine_call(x.astype(jnp.float32), ws, bt=bt,
+                         interpret=interpret)

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.secure_agg import kernel as _k
+from repro.kernels.secure_agg import ref as _ref
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -19,6 +20,23 @@ def secure_agg_combine(q, scales, weights, *, interpret: bool = None):
         interpret = kernels.INTERPRET
     return _k.secure_agg_combine_flat(q, scales, weights,
                                       interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_sum(x, weights, *, interpret: bool = None):
+    """Weighted sum of packed fp32 masked updates: (N, T), (N,) -> (T,).
+
+    On TPU (``kernels.INTERPRET = False``) this is the fused Pallas MXU
+    combine; in interpret mode it falls back to the jnp oracle in
+    ``ref.py`` — interpreting the kernel block-by-block at 10M+ parameter
+    sizes is prohibitively slow on CPU, and the oracle is the definition
+    the kernel is tested against anyway (tests/test_kernels.py).
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    if interpret:
+        return _ref.masked_sum_ref(x, weights)
+    return _k.masked_sum_flat(x, weights, interpret=False)
 
 
 def quantize_update(update_flat: jnp.ndarray):

@@ -14,3 +14,19 @@ import jax.numpy as jnp
 def secure_agg_ref(q, scales, weights):
     deq = q.astype(jnp.float32) * scales[:, None]
     return jnp.tensordot(weights.astype(jnp.float32), deq, axes=(0, 0))
+
+
+def masked_sum_ref(x, weights):
+    """Full-precision oracle for the packed masked combine:
+
+    masked_sum(x, weights) = sum_i weights_i * x_i
+
+    x: (n_clients, T) f32 — per-client packed, pairwise-masked updates
+    weights: (n_clients,) f32 — aggregation weights
+
+    Also serves as the interpret-mode production fallback on CPU hosts,
+    where running the Pallas kernel through the interpreter at real model
+    sizes is orders of magnitude slower than this single XLA matvec.
+    """
+    return jnp.tensordot(weights.astype(jnp.float32),
+                         x.astype(jnp.float32), axes=(0, 0))

@@ -64,6 +64,12 @@ SCRIPT = textwrap.dedent("""
 """)
 
 
+needs_axis_types = pytest.mark.skipif(
+    not hasattr(__import__("jax").sharding, "AxisType"),
+    reason="jax.sharding.AxisType (explicit-sharding API) not in this jax")
+
+
+@needs_axis_types
 @pytest.mark.slow
 def test_small_mesh_dryrun_all_paths():
     env = dict(os.environ, PYTHONPATH=SRC)
@@ -83,6 +89,7 @@ def test_small_mesh_dryrun_all_paths():
                if "train" in k)
 
 
+@needs_axis_types
 @pytest.mark.slow
 def test_fedavg_pod_collective_is_cross_pod():
     script = textwrap.dedent("""

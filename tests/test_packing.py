@@ -1,0 +1,78 @@
+"""pack_pytree/unpack_pytree round-trip over the packed data plane."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import (PackedLayout, pack_many, pack_pytree,
+                                unpack_pytree)
+
+TREES = [
+    {"w": np.arange(6, dtype=np.float32).reshape(2, 3)},
+    {"a": {"b": np.ones((4,), np.float32),
+           "c": [np.zeros((2, 2), np.float32),
+                 np.full((3,), 7.0, np.float32)]},
+     "d": np.array(5.0, np.float32)},                     # 0-d leaf
+    (np.ones((1, 2, 3), np.float32),
+     {"x": np.array([1.5], np.float32)}),                 # tuple root
+    {"deep": {"er": {"still": {"deeper": np.ones((8,), np.float32)}}}},
+]
+
+
+@pytest.mark.parametrize("tree", TREES)
+def test_roundtrip_preserves_structure_and_values(tree):
+    buf, layout = pack_pytree(tree)
+    assert buf.ndim == 1 and buf.dtype == jnp.float32
+    assert buf.shape[0] == layout.total_size == sum(
+        s.size for s in layout.leaves)
+    out = unpack_pytree(buf, layout)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(tree)):
+        assert a.shape == np.shape(b)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_roundtrip_preserves_dtypes():
+    tree = {"f32": jnp.ones((3,), jnp.float32),
+            "bf16": jnp.full((2, 2), 1.5, jnp.bfloat16),
+            "f16": jnp.full((5,), -2.0, jnp.float16)}
+    buf, layout = pack_pytree(tree)
+    out = unpack_pytree(buf, layout)
+    for k in tree:
+        assert out[k].dtype == tree[k].dtype, k
+        np.testing.assert_array_equal(
+            np.asarray(out[k], np.float32), np.asarray(tree[k], np.float32))
+
+
+def test_layout_offsets_are_contiguous():
+    tree = {"a": np.zeros((2, 3), np.float32), "b": np.zeros(5, np.float32)}
+    layout = PackedLayout.for_tree(tree)
+    off = 0
+    for spec in layout.leaves:
+        assert spec.offset == off
+        off += spec.size
+    assert layout.total_size == off == 11
+    d = layout.to_dict()
+    assert d["total_size"] == 11 and len(d["leaves"]) == 2
+
+
+def test_pack_with_shared_layout_and_errors():
+    t1 = {"w": np.ones((2, 2), np.float32)}
+    layout = PackedLayout.for_tree(t1)
+    buf, _ = pack_pytree({"w": np.full((2, 2), 3.0, np.float32)}, layout)
+    np.testing.assert_array_equal(np.asarray(buf), 3.0)
+    with pytest.raises(ValueError):
+        pack_pytree({"w": np.ones((3, 2), np.float32)}, layout)
+    with pytest.raises(ValueError):
+        unpack_pytree(jnp.zeros(7), layout)
+
+
+def test_pack_many_stacks_cohort():
+    trees = [{"w": np.full((3,), float(i), np.float32)} for i in range(4)]
+    stacked, layout = pack_many(trees)
+    assert stacked.shape == (4, 3)
+    np.testing.assert_array_equal(np.asarray(stacked[2]), 2.0)
+    assert layout.total_size == 3
