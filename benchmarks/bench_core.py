@@ -120,9 +120,10 @@ def bench_masked_round(rows, *, n_params=10_000_000,
     rng = np.random.default_rng(0)
     buf = rng.standard_normal(n_params, dtype=np.float32)
 
-    # --- seed baseline: per-leaf per-pair numpy loops, 10 x 1M leaves ----
+    # --- seed baseline: per-leaf per-pair numpy loops, 10 equal leaves ---
     cohort = [f"c{i:02d}" for i in range(seed_baseline_cohort)]
-    tree = {f"w{i}": buf[i * 1_000_000:(i + 1) * 1_000_000].copy()
+    leaf = max(1, n_params // 10)
+    tree = {f"w{i}": buf[i * leaf:(i + 1) * leaf].copy()
             for i in range(10)}
     t_seed = _time_s(_seed_mask_update_numpy, tree, cohort[0], cohort,
                      b"bench", n=1, warmup=0)
@@ -163,6 +164,77 @@ def bench_masked_round(rows, *, n_params=10_000_000,
                  t_seed / base_mask, "x faster (mask path)"))
     if write_json:
         path = os.path.join(_REPO_ROOT, "BENCH_secure_agg.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# dropout-round benchmark: mask-repair cost vs cohort size
+# ---------------------------------------------------------------------------
+def bench_dropout_round(rows, *, n_params=5_000_000, cohorts=(4, 16, 64),
+                        n_dropped=1, write_json=True):
+    """Cost of surviving a dropout in a masked round (BENCH_dropout.json).
+
+    Per cohort size: one survivor's correction derivation (client hot
+    path, cost ~ n_dropped PRG draws over the buffer), the server's
+    corrected (S, T) -> (T,) reduction through the fused kernel path, and
+    the plain no-dropout reduction as the baseline the repair overhead is
+    measured against. Ends with a bit-exactness check: the repaired
+    survivor mean must match the plain survivor mean.
+    """
+    from repro.core import secure_agg
+
+    report = {"model_params": n_params, "n_dropped": n_dropped,
+              "cohorts": {}, "notes": {
+                  "correction_s": "one survivor deriving its packed "
+                                  "correction against the dropped peers",
+                  "aggregate_repaired_s": "(S, T) corrected reduction, "
+                                          "kernel ops path",
+                  "aggregate_plain_s": "no-dropout (S, T) reduction "
+                                       "baseline"}}
+    rng = np.random.default_rng(0)
+    buf = rng.standard_normal(n_params, dtype=np.float32)
+    for c in cohorts:
+        cohort = [f"c{i:02d}" for i in range(c)]
+        dropped = cohort[c - n_dropped:]
+        survivors = cohort[:c - n_dropped]
+        t_corr = _time_s(secure_agg.repair_correction, n_params,
+                         survivors[0], dropped, b"bench", n=1)
+        stacked = jnp.asarray(rng.standard_normal(
+            (len(survivors), n_params), dtype=np.float32))
+        corrs = jnp.asarray(rng.standard_normal(
+            (len(survivors), n_params), dtype=np.float32))
+        t_plain = _time_s(secure_agg.aggregate_masked_packed, stacked, n=1)
+        t_rep = _time_s(lambda: secure_agg.aggregate_masked_packed(
+            stacked, corrections=corrs), n=1)
+        del stacked, corrs
+        report["cohorts"][str(c)] = {
+            "correction_s": t_corr, "aggregate_repaired_s": t_rep,
+            "aggregate_plain_s": t_plain,
+            "repair_overhead_x": t_rep / max(t_plain, 1e-12)}
+        rows.append((f"secure_agg.repair_correction_c{c}", t_corr * 1e6,
+                     f"{n_dropped} dropped"))
+        rows.append((f"secure_agg.repaired_aggregate_c{c}", t_rep * 1e6,
+                     f"{t_rep / max(t_plain, 1e-12):.2f}x plain"))
+
+    # --- repaired telescoping sanity: small cohort, real masks ----------
+    t = min(n_params, 100_000)
+    cohort = [f"c{i}" for i in range(5)]
+    small = buf[:t]
+    masked = [np.asarray(secure_agg.mask_packed(jnp.asarray(small), cid,
+                                                cohort, b"bench"))
+              for cid in cohort]
+    surv = cohort[:4]
+    corrs = np.stack([np.asarray(secure_agg.repair_correction(
+        t, cid, cohort[4:], b"bench")) for cid in surv])
+    agg = np.asarray(secure_agg.aggregate_masked_packed(
+        np.stack(masked[:4]), corrections=corrs))
+    err = float(np.abs(agg - small).max())
+    report["repair_max_abs_err_1of5"] = err
+    assert err < 1e-4, f"mask repair failed to cancel: {err}"
+    if write_json:
+        path = os.path.join(_REPO_ROOT, "BENCH_dropout.json")
         with open(path, "w") as f:
             json.dump(report, f, indent=2)
     return report
@@ -233,8 +305,40 @@ def bench_fl_round(rows):
                  f"bytes={con.server.board.stats['bytes_posted']/1e6:.1f}MB"))
 
 
+def run_smoke(rows=None):
+    """Tiny-shape pass over every benchmark entry point.
+
+    Run by CI so bench code cannot rot: exercises the same code paths as
+    the real benchmarks (including the JSON report assembly and the
+    repair bit-exactness assertion) at shapes that finish in seconds.
+    """
+    rows = [] if rows is None else rows
+    bench_aggregation(rows)
+    bench_secure_masking(rows)
+    bench_communicator(rows)
+    bench_kernels(rows)
+    bench_masked_round(rows, n_params=50_000, cohorts=(4,),
+                       seed_baseline_cohort=4, write_json=False)
+    bench_dropout_round(rows, n_params=50_000, cohorts=(4,),
+                        write_json=False)
+    bench_fl_round(rows)
+    return rows
+
+
 if __name__ == "__main__":
+    import argparse
     import sys
     sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape smoke pass over all entry points")
+    args = ap.parse_args()
     _rows = []
-    print(json.dumps(bench_masked_round(_rows), indent=2))
+    if args.smoke:
+        run_smoke(_rows)
+        print("name,us_per_call,derived")
+        for _name, _us, _derived in _rows:
+            print(f"{_name},{_us:.1f},{_derived}")
+    else:
+        print(json.dumps(bench_masked_round(_rows), indent=2))
+        print(json.dumps(bench_dropout_round(_rows), indent=2))

@@ -32,6 +32,7 @@ def main() -> None:
     bench_core.bench_aggregation(rows)
     bench_core.bench_secure_masking(rows)
     bench_core.bench_masked_round(rows)
+    bench_core.bench_dropout_round(rows)
     bench_core.bench_communicator(rows)
     bench_core.bench_kernels(rows)
     bench_core.bench_fl_round(rows)

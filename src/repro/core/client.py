@@ -63,6 +63,11 @@ class FLClientNode:
         self.eval_hp = 0
         self.said_hello = False
         self.posted_stats = False
+        # liveness + dropout repair (DESIGN.md §Dropout-tolerant rounds)
+        self._hb = 0
+        self._packed_size: Optional[int] = None
+        self._repair_done = None            # (hp, round, epoch) last posted
+        self._attempt_seen = 0              # server round_attempt mirrored
         # deployment state
         self.deployed_params = None
         self.deployed_digest: Optional[str] = None
@@ -73,6 +78,13 @@ class FLClientNode:
     # ------------------------------------------------------------------
     def tick(self) -> str:
         """One poll cycle. Returns a short description of what happened."""
+        # heartbeat first: the server watches the refresh stamp to tell
+        # slow from gone when a round deadline expires. Posted while the
+        # job is still unknown (the waiting_clients phase needs liveness
+        # too) and skipped entirely for jobs that run without deadlines.
+        if self.job is None or self.job.round_deadline_ticks:
+            self._hb += 1
+            self.comm.heartbeat(self.run_id, self._hb)
         if self.job is None:
             job_d = self.comm.fetch(f"runs/{self.run_id}/job",
                                     broadcast=True)
@@ -87,7 +99,8 @@ class FLClientNode:
             return "hello"
         if not self.posted_stats and self.job.data_schema is not None:
             stats = dict(self.dataset.stats())
-            stats["n_examples"] = getattr(self.dataset, "n_examples", 10 ** 6)
+            declared = getattr(self.dataset, "n_examples", None)
+            stats["n_examples"] = declared if declared is not None else 10 ** 6
             self.comm.post(f"runs/{self.run_id}/validation/{self.client_id}",
                            stats)
             self.posted_stats = True
@@ -100,12 +113,22 @@ class FLClientNode:
                                  broadcast=True)
         if status is None:
             return "waiting_status"
+        attempt = status.get("attempt", 0)
+        if attempt != self._attempt_seen:
+            # the admin resumed an interrupted round: the server re-runs it
+            # with the surviving cohort, so local round/eval state resets
+            self._attempt_seen = attempt
+            self.round_done = -1
+            self.eval_done = -1
+            self._repair_done = None
         phase = status["phase"]
         if phase == "paused":
             self._notify(f"run paused: {status.get('pause_reason')}")
             return "paused"
         if phase in ("collect", "distribute"):
             return self._do_round(status)
+        if phase == "repair":
+            return self._do_repair(status)
         if phase == "evaluate":
             return self._do_eval(status)
         if phase == "done":
@@ -164,14 +187,32 @@ class FLClientNode:
             batch = self._local_batch()
             params, opt_state, metrics = train_step(params, opt_state, batch)
             loss = float(metrics["loss"])
+        # examples contributed this round: the nominal training budget,
+        # capped by the silo's declared dataset size — a silo smaller than
+        # the budget carries proportionally less FedAvg weight (and its
+        # pre-scale factor stays <= 1, so masking strength is preserved)
         n_examples = self.job.local_steps * self.job.batch_size
+        declared = getattr(self.dataset, "n_examples", None)
+        if declared is not None:             # 0 means a truly empty silo
+            n_examples = min(n_examples, int(declared))
         if self.job.secure_aggregation:
             # packed data plane: flatten once, mask the whole buffer in one
             # vectorized pass, post the (T,) fp32 buffer — the server never
-            # sees per-tensor structure of the masked update
+            # sees per-tensor structure of the masked update. Masks are
+            # derived against *this round's* cohort (it shrinks when peers
+            # drop out), and the update is pre-scaled by
+            # n_examples/weight_denom so the server's uniform-weight sum
+            # is exact weighted FedAvg (masks cancel only under equal
+            # server-side weights).
+            round_cohort = sorted(msg.get("cohort") or self.cohort)
+            weight = n_examples / float(
+                msg.get("weight_denom")
+                or (self.job.local_steps * self.job.batch_size))
             buf, _ = pack_pytree(params)
+            self._packed_size = int(buf.shape[0])
             masked = secure_agg.mask_packed(
-                buf, self.client_id, self.cohort, self.pair_secret)
+                buf * jnp.float32(weight), self.client_id, round_cohort,
+                self.pair_secret)
             payload = {"packed": np.asarray(masked),
                        "n_examples": n_examples, "train_loss": loss}
         else:
@@ -184,6 +225,41 @@ class FLClientNode:
             subject=f"{self.run_id}/r{rnd}", outcome="update_posted",
             details={"loss": loss, "masked": self.job.secure_aggregation})
         return "update_posted"
+
+    def _do_repair(self, status) -> str:
+        """Dropout repair (DESIGN.md §Dropout-tolerant rounds): re-derive
+        my pairwise masks against the dropped peers and post the packed
+        correction buffer so the server can telescope the survivor sum."""
+        rnd, hp = status["round"], status["hp_index"]
+        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        info = self.comm.fetch(f"{base}/dropout", broadcast=True)
+        if info is None:
+            return "waiting_dropout"
+        key = (hp, rnd, info["epoch"])
+        if self._repair_done == key:
+            return "repair_already_done"
+        if self.client_id not in info["survivors"]:
+            return "not_a_survivor"
+        size = self._packed_size
+        if size is None:                     # lost state? derive the length
+            glob = self.comm.fetch(f"{base}/global",  # from the round's
+                                   broadcast=True)    # global model
+            if glob is None:
+                return "waiting_global_repair"
+            size = self._packed_size = int(sum(
+                np.asarray(l).size
+                for l in jax.tree.leaves(glob["params"])))
+        corr = secure_agg.repair_correction(
+            size, self.client_id, info["dropped"], self.pair_secret)
+        self.comm.post(f"{base}/repair/{info['epoch']}/{self.client_id}",
+                       {"correction": np.asarray(corr)})
+        self._repair_done = key
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="mask_repair",
+            subject=f"{self.run_id}/r{rnd}", outcome="correction_posted",
+            details={"dropped": list(info["dropped"]),
+                     "epoch": info["epoch"]})
+        return "repair_posted"
 
     def _eval_params(self, params, batches: int) -> float:
         losses = []

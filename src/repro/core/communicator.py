@@ -30,6 +30,7 @@ class Resource:
     blob: bytes                  # encrypted payload
     author: str                  # "server" or client_id
     created_at: float = field(default_factory=time.time)
+    version: int = 1             # bumps on overwrite — monotonic, no clock
 
 
 class MessageBoard:
@@ -46,11 +47,16 @@ class MessageBoard:
         self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
                       "rejected": 0}
 
-    # server-side put (no token needed, done by the coordinator process)
-    def put_server(self, path: str, blob: bytes):
-        self._resources[path] = Resource(path, blob, "server")
+    def _put(self, path: str, blob: bytes, author: str):
+        prev = self._resources.get(path)
+        self._resources[path] = Resource(
+            path, blob, author, version=prev.version + 1 if prev else 1)
         self.stats["posts"] += 1
         self.stats["bytes_posted"] += len(blob)
+
+    # server-side put (no token needed, done by the coordinator process)
+    def put_server(self, path: str, blob: bytes):
+        self._put(path, blob, "server")
 
     def put_client(self, client_id: str, token: str, path: str, blob: bytes):
         if not self.clients.validate_token(client_id, token):
@@ -59,14 +65,22 @@ class MessageBoard:
                 actor=client_id, operation="post", subject=path,
                 outcome="rejected_auth")
             raise PermissionError(f"invalid token for {client_id}")
-        self._resources[path] = Resource(path, blob, client_id)
-        self.stats["posts"] += 1
-        self.stats["bytes_posted"] += len(blob)
+        self._put(path, blob, client_id)
 
     def get(self, path: str) -> Optional[bytes]:
         self.stats["fetches"] += 1
         r = self._resources.get(path)
         return r.blob if r else None
+
+    def stat(self, path: str) -> Optional[dict]:
+        """Resource metadata without touching the ciphertext — used by the
+        server's heartbeat probes (``collect_heartbeats``): the coordinator
+        can see *that* a client posted and when, never *what*."""
+        r = self._resources.get(path)
+        if r is None:
+            return None
+        return {"author": r.author, "created_at": r.created_at,
+                "version": r.version, "bytes": len(r.blob)}
 
     def list(self, pattern: str) -> List[str]:
         return sorted(p for p in self._resources if fnmatch.fnmatch(p, pattern))
@@ -108,6 +122,22 @@ class ServerCommunicator:
         return serialization.unpack(
             crypto.decrypt(self.channel_key(client_id), blob))
 
+    def collect_heartbeats(self, run_id: str, cohort) -> Dict[str, int]:
+        """Liveness view: client_id -> overwrite version of the latest
+        heartbeat (missing clients are absent). Uses ``board.stat`` —
+        resource metadata only, no decryption: the coordinator sees *that*
+        a client refreshed its heartbeat, never *what* it contains. The
+        version is a monotonic overwrite counter, so liveness never
+        depends on clock resolution. Heartbeats ride the same pull-based
+        board as every other resource — the server never probes clients
+        directly (requirement 6)."""
+        out: Dict[str, int] = {}
+        for cid in cohort:
+            meta = self.board.stat(f"runs/{run_id}/heartbeat/{cid}")
+            if meta is not None:
+                out[cid] = int(meta["version"])
+        return out
+
 
 class ClientCommunicator:
     """Client-side Communicator: polls the board, never receives pushes."""
@@ -148,3 +178,14 @@ class ClientCommunicator:
     def post(self, path: str, payload):
         blob = crypto.encrypt(self.channel_key, serialization.pack(payload))
         self.board.put_client(self.client_id, self.token, path, blob)
+
+    def heartbeat(self, run_id: str, n: int):
+        """Post/refresh this client's liveness heartbeat for ``run_id``.
+
+        The refresh itself is the signal: each overwrite bumps the
+        resource's board-side version, which the server reads via
+        ``board.stat`` to distinguish *slow* (still refreshing) from
+        *gone* (frozen) when a round deadline expires. The board holds
+        exactly one heartbeat per client per run; the encrypted counter
+        payload is informational only."""
+        self.post(f"runs/{run_id}/heartbeat/{self.client_id}", {"n": int(n)})

@@ -36,6 +36,15 @@ class FLJob:
     contract_id: Optional[str] = None
     created_by: str = "admin"
     reduced: bool = True        # CPU-scale model variant for the container
+    # dropout tolerance (DESIGN.md §Dropout-tolerant rounds):
+    #   round_deadline_ticks — poll cycles a waiting phase tolerates before
+    #     the server starts shrinking the cohort (0 = wait forever, the old
+    #     behaviour); clients with a live heartbeat get one extra deadline
+    #     window before being dropped.
+    #   min_cohort — smallest cohort the run may shrink to; below it the
+    #     run pauses with a recorded provenance reason.
+    round_deadline_ticks: int = 0
+    min_cohort: int = 1
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -77,6 +86,7 @@ class JobCreator:
         schema = d.get("data_schema")
         if isinstance(schema, DataSchema):
             schema = schema.to_dict()
+        self._validate(d)
         return FLJob(
             job_id=f"job-{uuid.uuid4().hex[:8]}",
             arch=d["arch"],
@@ -96,4 +106,32 @@ class JobCreator:
             contract_id=contract_id,
             created_by=created_by,
             reduced=bool(d.get("reduced", True)),
+            round_deadline_ticks=int(d.get("round_deadline_ticks", 0)),
+            min_cohort=int(d.get("min_cohort", 1)),
         )
+
+    def _validate(self, d: dict):
+        """Reject unsupported combinations at job creation, not mid-round.
+
+        Pairwise masks only telescope through a linear reduction, so the
+        robust (sort-based) strategies cannot run on masked buffers —
+        sorting masked coordinates is meaningless. Weighted secure FedAvg
+        IS supported: clients pre-scale before masking (secure_agg.py).
+        """
+        secure = bool(d.get("secure_aggregation", True))
+        agg = d.get("aggregation", "fedavg")
+        if secure and agg != "fedavg":
+            self.metadata.record_provenance(
+                actor="job_creator", operation="create_job",
+                subject=str(agg), outcome="rejected",
+                details={"reason": "secure_aggregation requires fedavg"})
+            raise ValueError(
+                f"secure_aggregation=True is incompatible with "
+                f"aggregation={agg!r}: pairwise masks only cancel through "
+                f"a linear reduction (use fedavg, or disable secure "
+                f"aggregation for robust strategies)")
+        deadline = int(d.get("round_deadline_ticks", 0))
+        if deadline < 0:
+            raise ValueError("round_deadline_ticks must be >= 0")
+        if int(d.get("min_cohort", 1)) < 1:
+            raise ValueError("min_cohort must be >= 1")

@@ -31,9 +31,24 @@ exact in real arithmetic either way (both endpoints of a pair generate
 bit-identical masks from the shared key), so the cohort sum matches the
 plain sum to fp32 accumulation error.
 
-Cross-silo cohorts are small and reliable (no dropout handling needed — the
-paper's own setting), so the full secret-sharing recovery protocol is out of
-scope.
+Dropout repair (DESIGN.md §Dropout-tolerant rounds): cross-silo cohorts are
+small but NOT perfectly reliable — a silo that vanishes mid-round would
+leave its pairwise masks uncancelled in the survivor sum. Because both
+endpoints of a pair share the mask secret, recovery does not need the full
+Bonawitz secret-sharing machinery: the server publishes the dropout set and
+every survivor re-derives the sum of its masks toward the dropped peers
+(``repair_correction`` — same ``pair_keys`` + unrolled PRG) and posts it as
+a packed correction buffer. Subtracting each survivor's correction from its
+masked update removes exactly the orphaned mask terms, so the survivor-only
+sum telescopes again, bit-exact up to fp32 accumulation
+(tests/test_dropout.py).
+
+Weighted FedAvg: pairwise masks only cancel under *equal* server-side
+weights, so weighting happens client-side — each client pre-scales its
+packed update by ``n_examples / weight_denom`` (the server publishes the
+nominal ``weight_denom`` with the round) before masking, and the server
+reduces with uniform weights and divides the repaired sum by the survivors'
+total scaled weight. The result is exact weighted FedAvg over survivors.
 """
 from __future__ import annotations
 
@@ -46,7 +61,7 @@ import jax.numpy as jnp
 
 from repro.core.packing import as_matrix, pack_many, pack_pytree, \
     unpack_pytree
-from repro.kernels.secure_agg.ops import masked_sum
+from repro.kernels.secure_agg.ops import masked_sum, masked_sum_corrected
 
 DEFAULT_SCALE = 1e-2
 
@@ -139,7 +154,8 @@ def mask_packed(buf, client_id: str, cohort: Sequence[str],
 
 
 def aggregate_masked_packed(buffers, weights: Optional[Sequence[float]]
-                            = None, *, interpret: bool = None):
+                            = None, *, corrections=None,
+                            interpret: bool = None):
     """Combine (N, T) packed masked buffers into the (T,) cohort mean.
 
     Pairwise masking only telescopes under *equal* weights; for weighted
@@ -149,12 +165,38 @@ def aggregate_masked_packed(buffers, weights: Optional[Sequence[float]]
     ``aggregation.aggregate_packed`` it is NOT normalized, so pre-scaled
     sums stay sums. Routed through the fused Pallas combine (jnp oracle in
     interpret mode).
+
+    ``corrections`` (dropout repair): an (N, T) matrix of per-survivor
+    correction buffers (``repair_correction``), subtracted row-wise before
+    the reduction through the fused corrected combine — after a dropout
+    the survivor rows still carry masks toward the dropped peers, and the
+    corrections cancel exactly those terms.
     """
     x = as_matrix(buffers)
     n = x.shape[0]
     w = (jnp.full((n,), 1.0 / n, jnp.float32) if weights is None
          else jnp.asarray(weights, jnp.float32))
+    if corrections is not None:
+        return masked_sum_corrected(x, as_matrix(corrections), w,
+                                    interpret=interpret)
     return masked_sum(x, w, interpret=interpret)
+
+
+def repair_correction(size: int, client_id: str, dropped: Sequence[str],
+                      pair_secret: bytes, scale: float = DEFAULT_SCALE,
+                      prg: str = "fast"):
+    """This survivor's summed pairwise masks against the dropped peers.
+
+    Masking a zero buffer against the cohort ``{client_id} U dropped``
+    yields exactly ``sum_{j in dropped} sign(client_id, j) * mask(i, j)``
+    — the orphaned mask terms left in the survivor sum after ``dropped``
+    vanished. Both sides derive masks from the shared pair secret, so no
+    secret-sharing round is needed; the survivor posts this (T,) buffer
+    and the server subtracts it in the reduction
+    (``aggregate_masked_packed(corrections=...)``).
+    """
+    return mask_packed(jnp.zeros((size,), jnp.float32), client_id,
+                       [client_id, *dropped], pair_secret, scale, prg)
 
 
 # ---------------------------------------------------------------------------

@@ -9,14 +9,23 @@ a real deployment would run the same state machine behind a REST service.
 
 Run phases:
   waiting_clients -> validating -> round k (distribute -> collect ->
-  aggregate -> evaluate) -> [hyperparameter repeat] -> deploying -> done
-  (or 'paused' on validation failure — paper §VII Data Validation)
+  [repair] -> aggregate -> evaluate) -> [hyperparameter repeat] ->
+  deploying -> done
+  (or 'paused' on validation failure — paper §VII Data Validation — or when
+  dropout shrinks the cohort below ``min_cohort``)
+
+Dropout tolerance (DESIGN.md §Dropout-tolerant rounds): every polling phase
+counts its poll cycles; once ``job.round_deadline_ticks`` expires the Run
+Manager drops cohort members whose heartbeat went stale (live stragglers
+get one extra deadline window) instead of polling forever. A masked round
+that loses clients passes through the ``repair`` phase, where survivors
+post packed mask corrections that the aggregator folds into the reduction.
 """
 from __future__ import annotations
 
 import uuid
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -66,9 +75,23 @@ class RunState:
     round: int = 0
     cohort: List[str] = field(default_factory=list)
     global_digest: Optional[str] = None
+    init_digest: Optional[str] = None
     hp_index: int = 0
     history: List[dict] = field(default_factory=list)
     pause_reason: Optional[str] = None
+    # --- dropout tolerance ---------------------------------------------
+    dropped: List[str] = field(default_factory=list)
+    round_cohort: List[str] = field(default_factory=list)  # at distribute
+    ticks: int = 0                      # global poll-cycle counter
+    phase_ticks: int = 0                # cycles spent in the current phase
+    heartbeats: Dict[str, int] = field(default_factory=dict)  # board version
+    heartbeat_tick: Dict[str, int] = field(default_factory=dict)
+    repair_epoch: int = 0
+    round_attempt: int = 0              # bumped on resume: re-run the round
+    pending_round: Optional[dict] = None   # stashed collect while repairing
+    # --- outer (FedOpt) optimizer — explicit state, reset on hp restart --
+    outer: Any = None
+    outer_state: Any = None
 
 
 class FLServer:
@@ -112,6 +135,7 @@ class FLServer:
         digest = self.store.put(params, "init",
                                 {"run_id": run_id, "round": -1})
         self.run.global_digest = digest
+        self.run.init_digest = digest
         # publish job + per-client session info (token distribution would be
         # out-of-band in production; modelled via per-client channel here)
         self.comm.publish(f"runs/{run_id}/job", job.to_dict())
@@ -140,6 +164,8 @@ class FLServer:
             "global_digest": r.global_digest,
             "lr": self._job_lr(r.job),
             "pause_reason": r.pause_reason,
+            "dropped": list(r.dropped),
+            "attempt": r.round_attempt,
         })
 
     # ------------------------------------------------------------------
@@ -148,35 +174,126 @@ class FLServer:
         r = self.run
         if r is None:
             return "idle"
+        r.ticks += 1
+        self._refresh_heartbeats()
+        prev_phase = r.phase
         handler = getattr(self, f"_tick_{r.phase}", None)
         if handler:
             handler()
+            if self.run.phase != prev_phase:
+                self.run.phase_ticks = 0
             self._publish_status()
         return self.run.phase
+
+    # --- liveness / deadline bookkeeping ------------------------------
+    def _refresh_heartbeats(self):
+        """Track when each cohort member's heartbeat counter last advanced
+        (slow vs gone, DESIGN.md §Dropout-tolerant rounds)."""
+        r = self.run
+        if not r.job.round_deadline_ticks:
+            return                       # no deadlines -> no liveness needed
+        for cid, version in self.comm.collect_heartbeats(r.run_id,
+                                                         r.cohort).items():
+            if version != r.heartbeats.get(cid):
+                r.heartbeats[cid] = version
+                r.heartbeat_tick[cid] = r.ticks
+
+    def _heartbeat_stale(self, cid: str, window: int) -> bool:
+        r = self.run
+        return r.ticks - r.heartbeat_tick.get(cid, -(10 ** 9)) > window
+
+    def _enforce_deadline(self, missing: List[str], waiting_for: str):
+        """Shrink the cohort once a polling phase blows its deadline.
+
+        No-op before ``round_deadline_ticks`` poll cycles (or when the job
+        sets no deadline). At the deadline, members whose heartbeat went
+        stale are dropped; members that are still heartbeating (slow, not
+        gone) get one extra deadline window before the hard deadline drops
+        them too. Pauses the run when the cohort falls below
+        ``min_cohort``.
+        """
+        r = self.run
+        deadline = r.job.round_deadline_ticks
+        if not deadline or r.phase_ticks < deadline:
+            return
+        hard = r.phase_ticks >= 2 * deadline
+        to_drop = [cid for cid in missing
+                   if hard or self._heartbeat_stale(cid, deadline)]
+        if to_drop:
+            self._drop_clients(to_drop, waiting_for)
+
+    def _drop_clients(self, cids: List[str], waiting_for: str):
+        r = self.run
+        for cid in cids:
+            r.cohort.remove(cid)
+            r.dropped.append(cid)
+            self.metadata.record_provenance(
+                actor="run_manager", operation="client_dropped",
+                subject=cid, outcome="dropped",
+                details={"waiting_for": waiting_for, "round": r.round,
+                         "hp_index": r.hp_index,
+                         "phase_ticks": r.phase_ticks})
+        if len(r.cohort) < r.job.min_cohort:
+            r.phase = "paused"
+            r.pause_reason = (
+                f"cohort shrank to {len(r.cohort)} (< min_cohort "
+                f"{r.job.min_cohort}) after dropping {cids} while waiting "
+                f"for {waiting_for}")
+            self.metadata.record_provenance(
+                actor="run_manager", operation="pause_run",
+                subject=r.run_id, outcome="paused",
+                details={"reason": r.pause_reason,
+                         "dropped": list(r.dropped)})
+
+    def _poll_cohort(self, path_for, waiting_for: str) -> Optional[Dict]:
+        """One poll cycle over a per-client resource, with the deadline.
+
+        Probes presence via ``board.stat`` only — posted payloads are NOT
+        decrypted while stragglers are outstanding (a masked update is
+        tens of MB; decrypting the whole cohort on every poll tick would
+        dwarf the actual aggregation). Enforces the phase deadline on the
+        missing set, and decrypts exactly once: when every *surviving*
+        cohort member has posted. Returns ``{cid: payload}`` then, else
+        ``None`` (still waiting, or the run just paused).
+        """
+        r = self.run
+        missing = [cid for cid in r.cohort
+                   if self.board.stat(path_for(cid)) is None]
+        if missing:
+            self._enforce_deadline(missing, waiting_for)
+            if r.phase == "paused":
+                return None
+            if any(cid in missing for cid in r.cohort):
+                return None              # keep polling live stragglers
+        return {cid: self.comm.collect(path_for(cid), cid)
+                for cid in r.cohort}
 
     # --- phase handlers -----------------------------------------------
     def _tick_waiting_clients(self):
         r = self.run
-        ready = [cid for cid in r.cohort
-                 if self.board.get(f"runs/{r.run_id}/hello/{cid}")]
-        if len(ready) == len(r.cohort):
-            r.phase = "validating"
+        r.phase_ticks += 1
+        hellos = self._poll_cohort(
+            lambda cid: f"runs/{r.run_id}/hello/{cid}", "hello")
+        if hellos is None:
+            return
+        r.phase = "validating"
 
     def _tick_validating(self):
         """Data Validator: check every client's data sheet vs the schema."""
         r = self.run
+        r.phase_ticks += 1
         schema_d = r.job.data_schema
         if schema_d is None:
             r.phase = "distribute"
             return
         schema = DataSchema.from_dict(schema_d)
-        results = []
-        for cid in r.cohort:
-            stats = self.comm.collect(
-                f"runs/{r.run_id}/validation/{cid}", cid)
-            if stats is None:
-                return                       # still waiting (pull model)
-            results.append(validate_stats(cid, schema, stats))
+        stats = self._poll_cohort(
+            lambda cid: f"runs/{r.run_id}/validation/{cid}",
+            "validation_stats")
+        if stats is None:
+            return                       # still waiting (pull model)
+        results = [validate_stats(cid, schema, stats[cid])
+                   for cid in r.cohort]
         bad = [res for res in results if not res.ok]
         for res in results:
             self.metadata.record_provenance(
@@ -196,32 +313,96 @@ class FLServer:
 
     def _tick_distribute(self):
         r = self.run
+        r.round_cohort = list(r.cohort)
         params = self.store.get(r.global_digest)
         self.comm.publish(
             f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
             {"digest": r.global_digest,
              "params": jax.tree.map(np.asarray, params),
-             "round": r.round, "lr": self._job_lr(r.job)})
+             "round": r.round, "lr": self._job_lr(r.job),
+             # masked rounds: clients mask against *this round's* cohort
+             # (it shrinks across rounds) and pre-scale their update by
+             # n_examples / weight_denom so weighted FedAvg telescopes
+             "cohort": r.round_cohort,
+             "weight_denom": r.job.local_steps * r.job.batch_size})
         r.phase = "collect"
 
     def _tick_collect(self):
         r = self.run
+        r.phase_ticks += 1
         base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        updates, sizes, losses = {}, {}, {}
-        for cid in r.cohort:
-            msg = self.comm.collect(f"{base}/update/{cid}", cid)
-            if msg is None:
-                return                       # keep polling
-            # masked rounds post one packed fp32 buffer, not a pytree;
-            # key by the job's protocol so a mismatched client fails loudly
-            # here at the collect boundary
-            updates[cid] = (msg["packed"] if r.job.secure_aggregation
-                            else msg["params"])
-            sizes[cid] = msg["n_examples"]
-            losses[cid] = msg["train_loss"]
+        msgs = self._poll_cohort(lambda cid: f"{base}/update/{cid}",
+                                 "round_update")
+        if msgs is None:
+            return
+        # masked rounds post one packed fp32 buffer, not a pytree; key by
+        # the job's protocol so a mismatched client fails loudly here at
+        # the collect boundary
+        updates = {c: (m["packed"] if r.job.secure_aggregation
+                       else m["params"]) for c, m in msgs.items()}
+        sizes = {c: m["n_examples"] for c, m in msgs.items()}
+        losses = {c: m["train_loss"] for c, m in msgs.items()}
+        dropped_round = [c for c in r.round_cohort if c not in r.cohort]
+        if r.job.secure_aggregation and dropped_round:
+            # survivors' buffers still carry masks toward the dropped
+            # peers; stash the collect and run a mask-repair round
+            r.pending_round = {"updates": updates, "sizes": sizes,
+                               "losses": losses}
+            self._publish_dropout(base, dropped_round)
+            r.phase = "repair"
+            return
         self._aggregate_and_advance(updates, sizes, losses)
 
-    def _aggregate_and_advance(self, updates, sizes, losses):
+    def _publish_dropout(self, base: str, dropped_round: List[str]):
+        """Announce the dropout set; survivors answer with corrections
+        posted under the matching repair epoch (epochs advance when the
+        dropout set grows mid-repair, invalidating stale corrections)."""
+        r = self.run
+        r.repair_epoch += 1
+        self.comm.publish(f"{base}/dropout", {
+            "epoch": r.repair_epoch, "dropped": sorted(dropped_round),
+            "survivors": sorted(r.cohort)})
+        self.metadata.record_provenance(
+            actor="run_manager", operation="publish_dropout",
+            subject=f"{r.run_id}/r{r.round}", outcome="repair_requested",
+            details={"epoch": r.repair_epoch,
+                     "dropped": sorted(dropped_round)})
+
+    def _tick_repair(self):
+        """Mask-repair round (DESIGN.md §Dropout-tolerant rounds): every
+        survivor re-derives its pairwise masks against the dropped peers
+        and posts a packed correction; once all corrections for the
+        current epoch arrived the aggregator folds them into the
+        reduction so the surviving sum telescopes exactly."""
+        r = self.run
+        r.phase_ticks += 1
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        n_before = len(r.cohort)
+        msgs = self._poll_cohort(
+            lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
+            "mask_repair")
+        if r.phase == "paused":
+            return
+        if len(r.cohort) != n_before:
+            # the dropout set grew mid-repair: corrections already posted
+            # (even a complete set) target the old dropout set — bump the
+            # epoch and ask the remaining survivors again
+            self._publish_dropout(
+                base, [c for c in r.round_cohort if c not in r.cohort])
+            r.phase_ticks = 0
+            return
+        if msgs is None:
+            return
+        pending = r.pending_round
+        r.pending_round = None
+        self._aggregate_and_advance(
+            {c: pending["updates"][c] for c in r.cohort},
+            {c: pending["sizes"][c] for c in r.cohort},
+            {c: pending["losses"][c] for c in r.cohort},
+            corrections={c: m["correction"] for c, m in msgs.items()})
+
+    def _aggregate_and_advance(self, updates, sizes, losses,
+                               corrections=None):
         r = self.run
         job = r.job
         cids = sorted(updates)
@@ -229,30 +410,41 @@ class FLServer:
         old_params = self.store.get(r.global_digest)
         if job.secure_aggregation:
             # packed data plane: masked (T,) buffers -> one fused reduction
-            # through the Pallas combine, then a single unpack into the
-            # parameter structure (masks only telescope in the uniform mean)
+            # (dropout corrections folded in after a repair round), then a
+            # single unpack into the parameter structure. Clients pre-scale
+            # by n_examples/weight_denom before masking, so the uniform sum
+            # divided by the survivors' total scaled weight is exact
+            # weighted FedAvg (masks only telescope under equal weights).
             layout = PackedLayout.for_tree(old_params)
             stacked = np.stack([np.asarray(u, np.float32) for u in ups])
-            new_global = unpack_pytree(
-                secure_agg.aggregate_masked_packed(stacked), layout)
+            corr = (np.stack([np.asarray(corrections[c], np.float32)
+                              for c in cids])
+                    if corrections is not None else None)
+            denom = float(sum(sizes[c] for c in cids)) / float(
+                job.local_steps * job.batch_size)
+            total = secure_agg.aggregate_masked_packed(
+                stacked, np.ones(len(cids), np.float32), corrections=corr)
+            new_global = unpack_pytree(total / denom, layout)
         else:
             weights = ([sizes[c] for c in cids]
                        if job.aggregation == "fedavg" else None)
             new_global = aggregate(job.aggregation, ups, weights)
-        # outer (server) optimizer step — FedOpt family
+        # outer (server) optimizer step — FedOpt family; explicit RunState
+        # fields so hyperparameter restarts can reset momentum
         from repro.optim import OUTER_REGISTRY
-        if not hasattr(r, "_outer"):
-            r._outer = OUTER_REGISTRY[job.outer_optimizer]()
-            r._outer_state = r._outer.init(old_params)
+        if r.outer is None:
+            r.outer = OUTER_REGISTRY[job.outer_optimizer]()
+            r.outer_state = r.outer.init(old_params)
         new_global = jax.tree.map(
             lambda a, p: np.asarray(a, np.float32).reshape(np.shape(p)),
             new_global, old_params)
-        new_params, r._outer_state = r._outer.step(
-            old_params, new_global, r._outer_state)
+        new_params, r.outer_state = r.outer.step(
+            old_params, new_global, r.outer_state)
         digest = self.store.put(new_params, "aggregate", {
             "run_id": r.run_id, "round": r.round, "hp_index": r.hp_index,
             "aggregation": job.aggregation,
-            "secure": job.secure_aggregation})
+            "secure": job.secure_aggregation,
+            "cohort": cids, "repaired": corrections is not None})
         # contribution measurement (Evaluation Coordinator)
         contrib = data_size_contribution(sizes)
         if not job.secure_aggregation:
@@ -273,13 +465,12 @@ class FLServer:
         """Evaluation Coordinator: collect client-side evals of the new
         global model (evaluation happens on clients — private test data)."""
         r = self.run
+        r.phase_ticks += 1
         base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        evals = {}
-        for cid in r.cohort:
-            msg = self.comm.collect(f"{base}/eval/{cid}", cid)
-            if msg is None:
-                return
-            evals[cid] = msg
+        evals = self._poll_cohort(lambda cid: f"{base}/eval/{cid}",
+                                  "round_eval")
+        if evals is None:
+            return
         mean_eval = float(np.mean([e["eval_loss"] for e in evals.values()]))
         r.history[-1]["mean_eval_loss"] = mean_eval
         self.metadata.record_provenance(
@@ -290,12 +481,17 @@ class FLServer:
         if r.round >= r.job.rounds:
             hp = r.job.hyperparameter_search
             if hp and r.hp_index + 1 < len(hp["values"]):
-                # FL Run Manager repeats the process with new hyperparameters
+                # FL Run Manager repeats the process with new
+                # hyperparameters — every trial restarts from the *init*
+                # model (not the first trial's round-0 aggregate) and with
+                # fresh outer-optimizer state, so trials are comparable
                 r.hp_index += 1
                 r.round = 0
-                params = self.store.get(r.history[0]["digest"])
+                params = self.store.get(r.init_digest)
                 r.global_digest = self.store.put(
                     params, "hp_restart", {"hp_index": r.hp_index})
+                r.outer = None
+                r.outer_state = None
                 r.phase = "distribute"
             else:
                 r.phase = "deploying"
@@ -342,11 +538,36 @@ class FLServer:
 
     def admin_resume(self, admin: str):
         if self.run and self.run.phase == "paused":
-            self.run.phase = "validating"
-            self.run.pause_reason = None
+            r = self.run
+            r.pause_reason = None
+            r.phase_ticks = 0
+            r.pending_round = None       # discard any half-collected round
+            # If the current round's aggregate was already committed (the
+            # pause hit during evaluate), resume straight into evaluate —
+            # re-running the round would double-apply it and duplicate its
+            # history entry. Otherwise re-run the round: bump the attempt
+            # so clients reset their done-markers, and clear the aborted
+            # attempt's resources NOW — before any client can fetch the
+            # stale global (masked updates against the old cohort must
+            # never be collected).
+            aggregated = (bool(r.history)
+                          and r.history[-1]["round"] == r.round
+                          and r.history[-1]["hp_index"] == r.hp_index
+                          and "mean_eval_loss" not in r.history[-1])
+            if aggregated:
+                r.phase = "evaluate"
+            else:
+                r.phase = "validating"
+                r.round_attempt += 1
+                base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+                for path in self.board.list(f"{base}/*"):
+                    self.board.delete(path)
             self.metadata.record_provenance(
                 actor=admin, operation="resume_run",
-                subject=self.run.run_id, outcome="resumed")
+                subject=r.run_id, outcome="resumed",
+                details={"round_attempt": r.round_attempt,
+                         "resumed_into": r.phase,
+                         "cohort": list(r.cohort)})
             self._publish_status()
 
     def monitor(self) -> dict:
@@ -355,6 +576,7 @@ class FLServer:
         return {
             "phase": r.phase if r else "idle",
             "round": r.round if r else None,
+            "dropped_clients": list(r.dropped) if r else [],
             "board": dict(self.board.stats),
             "registered_clients": self.clients.active_clients(),
             "models_stored": len(self.store.list()),

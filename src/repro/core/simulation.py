@@ -68,14 +68,42 @@ class Consortium:
                 config=client_config))
         return run_id
 
-    def run_to_completion(self, max_ticks: int = 10_000) -> str:
-        for _ in range(max_ticks):
+    def _cid(self, org_or_cid: str) -> str:
+        return self.client_ids.get(org_or_cid, org_or_cid)
+
+    def run_to_completion(self, max_ticks: int = 10_000,
+                          drop_at: Optional[dict] = None) -> str:
+        """Drive server and clients until a terminal phase.
+
+        ``drop_at`` injects client dropout: ``{org_or_client_id: when}``
+        where ``when`` is either an absolute tick index (int) or a
+        ``(phase, round)`` tuple — the node stops ticking (vanishes, no
+        farewell message) the first time the server reports that phase at
+        that round. E.g. ``{"solarx": ("collect", 1)}`` kills solarx
+        right as round 1's collect opens, before it can post its update.
+        """
+        specs = {self._cid(k): v for k, v in (drop_at or {}).items()}
+        dead = set()
+        for t in range(max_ticks):
             phase = self.server.tick()
+            run = self.server.run
+            for cid, when in specs.items():
+                if cid in dead:
+                    continue
+                if isinstance(when, int):
+                    if t >= when:
+                        dead.add(cid)
+                elif run is not None and phase == when[0] \
+                        and run.round == when[1]:
+                    dead.add(cid)
             for node in self.nodes:
+                if node.client_id in dead:
+                    continue
                 node.tick()
             if phase in ("done", "paused"):
                 # let clients observe the terminal state once more
                 for node in self.nodes:
-                    node.tick()
+                    if node.client_id not in dead:
+                        node.tick()
                 return phase
         raise RuntimeError("run did not converge within tick budget")

@@ -23,7 +23,8 @@ class SiloDataset:
     seq_len: int
     seed: int
     alpha: float = 0.3          # Dirichlet concentration (lower = more skew)
-    _rng: np.random.Generator = None
+    n_examples: int = None      # declared silo size (None = unbounded);
+    _rng: np.random.Generator = None        # caps the silo's FedAvg weight
     _probs: np.ndarray = None
 
     def __post_init__(self):

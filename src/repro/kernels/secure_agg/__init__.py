@@ -1,1 +1,2 @@
-from repro.kernels.secure_agg.ops import secure_agg_combine  # noqa: F401
+from repro.kernels.secure_agg.ops import (masked_sum, masked_sum_corrected,
+                                          secure_agg_combine)  # noqa: F401

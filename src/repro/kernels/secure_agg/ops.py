@@ -39,6 +39,24 @@ def masked_sum(x, weights, *, interpret: bool = None):
     return _k.masked_sum_flat(x, weights, interpret=False)
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def masked_sum_corrected(x, corr, weights, *, interpret: bool = None):
+    """Dropout-repair combine: (N, T), (N, T), (N,) -> (T,).
+
+    ``sum_i weights_i * (x_i - corr_i)`` — survivors' masked updates minus
+    their re-derived corrections against the dropped peers, fused into one
+    Pallas tile pass on TPU (the correction subtract rides the VPU inside
+    the combine tile, no repaired (N, T) intermediate in HBM). Interpret
+    mode falls back to the jnp oracle for the same reason ``masked_sum``
+    does.
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    if interpret:
+        return _ref.masked_sum_corrected_ref(x, corr, weights)
+    return _k.masked_sum_corrected_flat(x, corr, weights, interpret=False)
+
+
 def quantize_update(update_flat: jnp.ndarray):
     """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
     scale = jnp.max(jnp.abs(update_flat)) / 127.0 + 1e-12

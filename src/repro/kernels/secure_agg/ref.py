@@ -30,3 +30,21 @@ def masked_sum_ref(x, weights):
     """
     return jnp.tensordot(weights.astype(jnp.float32),
                          x.astype(jnp.float32), axes=(0, 0))
+
+
+def masked_sum_corrected_ref(x, corr, weights):
+    """Oracle for the dropout-repair combine:
+
+    masked_sum_corrected(x, corr, weights) = sum_i weights_i * (x_i - corr_i)
+
+    x: (n_survivors, T) f32 — survivors' packed, pairwise-masked updates
+    corr: (n_survivors, T) f32 — each survivor's re-derived sum of masks
+        against the dropped peers (``secure_agg.repair_correction``)
+    weights: (n_survivors,) f32 — aggregation weights
+
+    Subtracting a survivor's correction removes exactly its mask terms
+    toward dropped clients, so the survivor-only sum telescopes again.
+    """
+    return jnp.tensordot(weights.astype(jnp.float32),
+                         x.astype(jnp.float32) - corr.astype(jnp.float32),
+                         axes=(0, 0))

@@ -8,6 +8,8 @@ forced deploy, hyperparameter repeat).
 import numpy as np
 import pytest
 
+import jax
+
 from repro.core import Consortium, DataSchema
 from repro.core.reporting import governance_report, run_report
 from repro.data import make_silo_datasets
@@ -99,6 +101,75 @@ def test_hyperparameter_repeat():
     assert phase == "done"
     hist = con.server.run.history
     assert {h["hp_index"] for h in hist} == {0, 1}
+
+
+def test_hp_restart_uses_init_model():
+    """Regression: every hyperparameter trial must start from the stored
+    init model, not from the previous trial's round-0 aggregate — trial
+    1's starting params equal trial 0's (same digest as init)."""
+    con, run_id, phase = run_consortium({
+        "rounds": 1,
+        "hyperparameter_search": {"parameter": "lr",
+                                  "values": [1e-3, 3e-3]},
+    })
+    assert phase == "done"
+    init = con.server.run.init_digest
+    glob0 = con.nodes[0].comm.fetch(f"runs/{run_id}/round/0/0/global",
+                                    broadcast=True)
+    glob1 = con.nodes[0].comm.fetch(f"runs/{run_id}/round/1/0/global",
+                                    broadcast=True)
+    assert glob0["digest"] == init
+    assert glob1["digest"] == init          # trial 1 == trial 0 start
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(glob0["params"])[0]),
+        np.asarray(jax.tree.leaves(glob1["params"])[0]))
+
+
+def test_outer_state_resets_on_hp_restart():
+    """Regression: FedOpt momentum must not leak across hp trials — the
+    outer optimizer is rebuilt (fresh state) at every hp restart, and is
+    an explicit RunState field, not a dynamic attribute."""
+    con = Consortium(ORGS, seed=0)
+    contract = con.negotiate({
+        "arch": "fedforecast-100m", "rounds": 2, "local_steps": 1,
+        "batch_size": 2, "lr": 1e-3, "data_schema": None,
+        "outer_optimizer": "fedavgm",
+        "hyperparameter_search": {"parameter": "lr",
+                                  "values": [1e-3, 3e-3]},
+    })
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(3, vocab=512, seq_len=32, seed=0)
+    con.start(job, ds)
+    seen = []
+    orig = con.server._aggregate_and_advance
+
+    def spy(updates, sizes, losses, corrections=None):
+        orig(updates, sizes, losses, corrections=corrections)
+        seen.append((con.server.run.hp_index, id(con.server.run.outer)))
+
+    con.server._aggregate_and_advance = spy
+    assert con.run_to_completion() == "done"
+    by_trial = {hp: {o for h, o in seen if h == hp} for hp, _ in seen}
+    assert set(by_trial) == {0, 1}
+    assert all(len(v) == 1 for v in by_trial.values())  # stable per trial
+    assert by_trial[0] != by_trial[1]                   # fresh per restart
+    assert not hasattr(con.server.run, "_outer")        # no dynamic attrs
+
+
+def test_job_creation_rejects_secure_robust_aggregation():
+    """Masked buffers cannot be sorted: secure aggregation only composes
+    with the linear fedavg reduction — anything else fails at job
+    creation, loudly and with a provenance record."""
+    con = Consortium(["a", "b"], seed=0)
+    for agg in ("trimmed_mean", "median"):
+        with pytest.raises(ValueError, match="secure_aggregation"):
+            con.server.job_creator.from_admin(
+                "server-admin", {"aggregation": agg,
+                                 "secure_aggregation": True})
+    rejected = [r for r in con.server.metadata.query(kind="provenance")
+                if r["operation"] == "create_job"
+                and r["outcome"] == "rejected"]
+    assert len(rejected) == 2
 
 
 def test_admin_force_deploy():
