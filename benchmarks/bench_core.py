@@ -242,7 +242,7 @@ def bench_dropout_round(rows, *, n_params=5_000_000, cohorts=(4, 16, 64),
 
 def bench_communicator(rows):
     from repro.core import crypto
-    from repro.core.serialization import pack, unpack
+    from repro.core.serialization import pack
     tree = _tree(n_leaves=4, size=50_000)
     key = crypto.derive_key(b"m" * 32, "bench")
     blob = pack(tree)
@@ -255,6 +255,17 @@ def bench_communicator(rows):
     rows.append(("communicator.encrypt", us_e,
                  f"ratio={len(enc)/len(blob):.2f}"))
     rows.append(("communicator.decrypt+verify", us_d, ""))
+    # auto-compression on a masked-update-sized incompressible payload:
+    # the probe skips zlib entirely instead of grinding level 1 over
+    # near-random fp32 bytes for ~1% savings
+    weights = np.random.default_rng(0).standard_normal(
+        2 ** 21).astype(np.float32).tobytes()          # 8MB, incompressible
+    us_forced = _time_us(crypto.encrypt, key, weights, n=3,
+                         compress=True)
+    us_auto = _time_us(crypto.encrypt, key, weights, n=3)
+    rows.append(("communicator.encrypt_8MB_fp32_forced_zlib", us_forced, ""))
+    rows.append(("communicator.encrypt_8MB_fp32_auto", us_auto,
+                 f"{us_forced / us_auto:.1f}x faster (probe skips zlib)"))
 
 
 def bench_kernels(rows):

@@ -10,7 +10,7 @@ table; tests/test_saam.py asserts all 40 pass (the paper's conclusion:
 """
 from __future__ import annotations
 
-from typing import Callable, List
+from typing import List
 
 
 def _prov(md, **kw):
@@ -119,8 +119,10 @@ def build_probes() -> List[dict]:
                                               node.comm.token),
             "validate_token"))
     add(22, "FL Server", "Generate device token", "Client Management",
-        lambda con, rid, node, ex: (_has_op(md(con), "issue_tokens"),
-                                    "issue_tokens provenance"))
+        lambda con, rid, node, ex: (
+            _has_op(md(con), "issue_token")     # per agent-lease (scheduler)
+            or _has_op(md(con), "issue_tokens"),   # per-run rotation
+            "device-token provenance"))
     add(23, "FL Server", "Register client", "Communicator+Client Mgmt",
         lambda con, rid, node, ex: (_has_op(md(con), "register_client"),
                                     "register_client provenance"))
@@ -195,7 +197,6 @@ def build_probes() -> List[dict]:
 
 def run_saam(verbose: bool = True):
     """Execute the scenario evaluation against a real FL run."""
-    import numpy as np
     from repro.core import Consortium, DataSchema
     from repro.data import make_silo_datasets
 

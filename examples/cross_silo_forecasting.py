@@ -17,7 +17,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 
 from repro.core import ClientConfig, Consortium, DataSchema
 from repro.core.reporting import client_report, governance_report, run_report

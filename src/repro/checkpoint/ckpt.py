@@ -9,7 +9,7 @@ from __future__ import annotations
 import hashlib
 import os
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import msgpack
 import numpy as np

@@ -8,7 +8,7 @@ the spec (<=2 layers, d_model<=512, <=4 experts).
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------

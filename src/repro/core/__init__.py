@@ -10,7 +10,8 @@ Deployer + Inference Manager + Model Monitoring), ClientCommunicator.
 """
 from repro.core.aggregation import (AGGREGATORS, aggregate,
                                     aggregate_packed)  # noqa: F401
-from repro.core.client import ClientConfig, FLClientNode  # noqa: F401
+from repro.core.client import (ClientAgent, ClientConfig, FLClientNode,
+                               OversubscribedError)  # noqa: F401
 from repro.core.clients import ClientManagement  # noqa: F401
 from repro.core.communicator import (ClientCommunicator, MessageBoard,
                                      ServerCommunicator)  # noqa: F401
@@ -20,7 +21,10 @@ from repro.core.jobs import FLJob, JobCreator  # noqa: F401
 from repro.core.metadata import MetadataStore  # noqa: F401
 from repro.core.packing import (PackedLayout, pack_many, pack_pytree,
                                 unpack_pytree)  # noqa: F401
-from repro.core.server import FLServer, ModelStore  # noqa: F401
+from repro.core.scheduler import (FederationScheduler,
+                                  JobEntry)  # noqa: F401
+from repro.core.server import (FLServer, ModelStore,
+                               WakeCondition)  # noqa: F401
 from repro.core.simulation import Consortium  # noqa: F401
 from repro.core.validation import (DataSchema, ValidationResult,
                                    validate_stats)  # noqa: F401

@@ -14,9 +14,8 @@ The TPU data plane equivalent is ``repro.training.steps.fedavg_pod_params``
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Optional, Sequence
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

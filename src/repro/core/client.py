@@ -10,8 +10,9 @@ asked it to (requirement 6).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -26,7 +27,7 @@ from repro.core.jobs import FLJob
 from repro.core.metadata import MetadataStore
 from repro.core.validation import apply_preprocessing
 from repro.models import build_model
-from repro.optim import adamw, apply_updates, sgd
+from repro.optim import adamw, sgd
 from repro.training import make_train_step
 
 
@@ -36,6 +37,65 @@ class ClientConfig:
     monitor_threshold: float = 12.0    # alert threshold for deployed model
     personalization_steps: int = 2     # local fine-tune steps on the release
     eval_batches: int = 2
+
+
+# ---------------------------------------------------------------------------
+# Shared compiled-executable caches. A silo agent multiplexing N concurrent
+# jobs over the same architecture must not pay N jit compilations — the
+# compiled step is a pure function of (arch, reduced, optimizer, lr), not of
+# the job or the node, so every FLClientNode in the process shares one.
+# Both caches are LRU-bounded: a long-lived scheduler process sweeping many
+# distinct (arch, lr) combinations must not accumulate XLA executables
+# forever (per-node caches used to die with the node).
+# ---------------------------------------------------------------------------
+_MODEL_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_STEP_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_MODEL_CACHE_MAX = 8
+_STEP_CACHE_MAX = 32
+
+# internal tag for the release fine-tune step — deliberately NOT a string,
+# so it can never collide with a governance-negotiated job.optimizer value
+PERSONALIZE = object()
+
+
+def _lru_get(cache, key, build, cap):
+    if key in cache:
+        cache.move_to_end(key)
+        return cache[key]
+    value = cache[key] = build()
+    while len(cache) > cap:
+        cache.popitem(last=False)
+    return value
+
+
+def shared_model(arch: str, reduced: bool):
+    def build():
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        if reduced:
+            cfg = cfg.reduced()
+        model = build_model(cfg)
+        return (cfg, model, jax.jit(model.loss_fn))
+    return _lru_get(_MODEL_CACHE, (arch, bool(reduced)), build,
+                    _MODEL_CACHE_MAX)
+
+
+def shared_step(arch: str, reduced: bool, optimizer, lr: float):
+    def build():
+        _, model, _ = shared_model(arch, reduced)
+        if optimizer is PERSONALIZE:
+            opt = sgd(lr, momentum=0.0)   # release fine-tune: no momentum
+        elif optimizer == "adamw":
+            opt = adamw(lr, weight_decay=0.0)
+        else:
+            # any other negotiated value falls back to momentum-SGD, same
+            # as the pre-cache behaviour (the string is not validated)
+            opt = sgd(lr, momentum=0.9)
+        return (opt, jax.jit(make_train_step(model, opt)))
+    key = (arch, bool(reduced),
+           "~personalize" if optimizer is PERSONALIZE else ("s:" + optimizer),
+           float(lr))
+    return _lru_get(_STEP_CACHE, key, build, _STEP_CACHE_MAX)
 
 
 class FLClientNode:
@@ -138,30 +198,17 @@ class FLClientNode:
     # ------------------------------------------------------------------
     def _setup_job(self, job: FLJob):
         self.job = job
-        from repro.configs import get_config
-        cfg = get_config(job.arch)
-        if job.reduced:
-            cfg = cfg.reduced()
-        self.cfg = cfg
-        self.model = build_model(cfg)
-        # jit once per job — rounds/evals reuse the compiled executables
-        self._loss_jit = jax.jit(self.model.loss_fn)
-        self._step_cache: Dict[float, tuple] = {}
+        # compiled executables are shared process-wide: a silo serving N
+        # concurrent jobs on one architecture compiles once, not N times
+        self.cfg, self.model, self._loss_jit = shared_model(
+            job.arch, job.reduced)
         self.metadata.record_provenance(
             actor=self.client_id, operation="fetch_job", subject=job.job_id,
             outcome="configured", details={"arch": job.arch})
 
     def _get_step(self, lr: float):
-        if lr not in self._step_cache:
-            opt = self._make_opt(lr)
-            self._step_cache[lr] = (opt,
-                                    jax.jit(make_train_step(self.model, opt)))
-        return self._step_cache[lr]
-
-    def _make_opt(self, lr: float):
-        if self.job.optimizer == "adamw":
-            return adamw(lr, weight_decay=0.0)
-        return sgd(lr, momentum=0.9)
+        return shared_step(self.job.arch, self.job.reduced,
+                           self.job.optimizer, lr)
 
     def _local_batch(self):
         batch = self.dataset.batch(self.job.batch_size)
@@ -327,11 +374,8 @@ class FLClientNode:
     def _personalize(self, params):
         if self.config.personalization_steps <= 0:
             return params
-        if not hasattr(self, "_perso_step"):
-            opt = sgd(1e-4, momentum=0.0)
-            self._perso_step = (opt, jax.jit(make_train_step(self.model,
-                                                             opt)))
-        opt, step = self._perso_step
+        opt, step = shared_step(self.job.arch, self.job.reduced,
+                                PERSONALIZE, 1e-4)
         opt_state = opt.init(params)
         for _ in range(self.config.personalization_steps):
             params, opt_state, _ = step(params, opt_state,
@@ -384,3 +428,90 @@ class FLClientNode:
             logits, cache = self._decode_jit(params, cache, tok, pos)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
         return np.stack(out, axis=1)
+
+
+class OversubscribedError(RuntimeError):
+    """A silo was asked to serve more concurrent jobs than it declared."""
+
+
+class ClientAgent:
+    """Silo-side job agent (DESIGN.md §Federation scheduler).
+
+    One agent per silo: it owns the silo's single identity — client id,
+    device token, communicator — and multiplexes it across the concurrent
+    FL jobs the federation scheduler admitted onto this silo, one
+    ``FLClientNode`` per run. ``capacity`` is the silo's declared ceiling
+    on concurrent local trainings; ``attach`` refuses to exceed it, so
+    even a buggy scheduler cannot oversubscribe a silo from the client
+    side. ``tick_every`` models silo-side poll latency (a slow silo polls
+    the board every k-th scheduler pass) — the event-driven server loop
+    skips runs that are only waiting on such silos.
+    """
+
+    def __init__(self, client_id: str, comm: ClientCommunicator, dataset,
+                 *, capacity: int = 1, config: Optional[ClientConfig] = None,
+                 metadata: Optional[MetadataStore] = None,
+                 tick_every: int = 1):
+        self.client_id = client_id
+        self.comm = comm
+        self.dataset = dataset
+        self.capacity = int(capacity)
+        self.config = config
+        self.metadata = metadata or MetadataStore()
+        self.tick_every = max(1, int(tick_every))
+        self.nodes: Dict[str, FLClientNode] = {}    # run_id -> node (kept
+        self.active: List[str] = []                 # after release, for
+        self.ticks = 0                              # audit/inspection)
+
+    @property
+    def load(self) -> int:
+        return len(self.active)
+
+    def node(self, run_id: str) -> FLClientNode:
+        return self.nodes[run_id]
+
+    def attach(self, run_id: str, cohort: List[str], pair_secret: bytes, *,
+               dataset=None, config: Optional[ClientConfig] = None
+               ) -> FLClientNode:
+        """Start (or resume) serving a run. Reuses the run's existing node
+        on re-admission so pipeline state (round markers, deployment)
+        survives suspension."""
+        if run_id not in self.active:
+            if self.load >= self.capacity:
+                raise OversubscribedError(
+                    f"silo {self.client_id} already serves {self.load} "
+                    f"concurrent jobs (declared capacity {self.capacity})")
+            self.active.append(run_id)
+        if run_id not in self.nodes:
+            self.nodes[run_id] = FLClientNode(
+                self.client_id, self.comm,
+                dataset if dataset is not None else self.dataset,
+                run_id, cohort, pair_secret,
+                config=config or self.config, metadata=self.metadata)
+        return self.nodes[run_id]
+
+    def release(self, run_id: str):
+        """Stop serving a run (completion, suspension, or dropout). The
+        node object stays around for inspection and future re-attach."""
+        if run_id in self.active:
+            self.active.remove(run_id)
+
+    def tick(self, scheduler_pass: Optional[int] = None) -> str:
+        if scheduler_pass is not None and scheduler_pass % self.tick_every:
+            return "throttled"
+        self.ticks += 1
+        for run_id in list(self.active):
+            try:
+                self.nodes[run_id].tick()
+            except PermissionError:
+                # identity revoked mid-run: this silo is out of the
+                # federation. Stop serving every run (each job's dropout
+                # machinery handles the disappearance); one revoked silo
+                # must not crash the whole in-process loop.
+                self.metadata.record_provenance(
+                    actor=self.client_id, operation="agent_revoked",
+                    subject=run_id, outcome="detached",
+                    details={"runs": list(self.active)})
+                self.active.clear()
+                return "revoked"
+        return "ticked" if self.active else "idle"

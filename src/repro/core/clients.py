@@ -116,6 +116,23 @@ class ClientManagement:
             details={"clients": sorted(issued)})
         return issued
 
+    def ensure_token(self, client_id: str) -> str:
+        """Issue a device token for one silo unless it already holds a live
+        one. The federation scheduler multiplexes a silo's single identity
+        across concurrent runs, so tokens rotate per *agent lease epoch*
+        (registration), not per run — rotating mid-run would cut off every
+        other job the silo is serving."""
+        c = self.registry.get(client_id)
+        if c is None or c.status != "active":
+            raise PermissionError(f"{client_id} is not an active client")
+        if not c.token:
+            c.token = crypto.new_device_token()
+            self.metadata.record_provenance(
+                actor="client_management", operation="issue_token",
+                subject=client_id, outcome="issued",
+                details={"scope": "agent_lease"})
+        return c.token
+
     def validate_token(self, client_id: str, token: str) -> bool:
         c = self.registry.get(client_id)
         return bool(c and c.status == "active" and c.token

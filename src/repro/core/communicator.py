@@ -17,7 +17,7 @@ from __future__ import annotations
 import fnmatch
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.core import crypto, serialization
 from repro.core.clients import ClientManagement
@@ -31,26 +31,36 @@ class Resource:
     author: str                  # "server" or client_id
     created_at: float = field(default_factory=time.time)
     version: int = 1             # bumps on overwrite — monotonic, no clock
+    seq: int = 0                 # board-wide mutation counter at last write
 
 
 class MessageBoard:
     """The shared transport substrate (in-process stand-in for the REST API).
 
     The board itself stores only ciphertext; it can be hosted by the
-    (semi-trusted) coordinator without seeing plaintext updates.
+    (semi-trusted) coordinator without seeing plaintext updates. Every write
+    stamps the resource with a board-wide monotonic mutation counter
+    (``seq``) — the federation scheduler's wake conditions compare it
+    against a snapshot to tell "something this run waits for changed"
+    without decrypting anything (``latest_seq``). Runs never collide on the
+    board because every run's resources live under its own
+    ``runs/<run_id>/...`` namespace.
     """
 
     def __init__(self, clients: ClientManagement, metadata: MetadataStore):
         self.clients = clients
         self.metadata = metadata
         self._resources: Dict[str, Resource] = {}
+        self.seq = 0                      # monotonic board mutation counter
         self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
                       "rejected": 0}
 
     def _put(self, path: str, blob: bytes, author: str):
         prev = self._resources.get(path)
+        self.seq += 1
         self._resources[path] = Resource(
-            path, blob, author, version=prev.version + 1 if prev else 1)
+            path, blob, author, version=prev.version + 1 if prev else 1,
+            seq=self.seq)
         self.stats["posts"] += 1
         self.stats["bytes_posted"] += len(blob)
 
@@ -82,11 +92,26 @@ class MessageBoard:
         return {"author": r.author, "created_at": r.created_at,
                 "version": r.version, "bytes": len(r.blob)}
 
+    def latest_seq(self, paths) -> int:
+        """Largest mutation counter among ``paths`` (0 if none exist).
+
+        Metadata-only, like ``stat``: lets a scheduler ask "did anything
+        this run is waiting for appear/change since snapshot S?" in O(len
+        (paths)) dict lookups, with no decryption and no polling of the
+        payloads themselves."""
+        latest = 0
+        for path in paths:
+            r = self._resources.get(path)
+            if r is not None and r.seq > latest:
+                latest = r.seq
+        return latest
+
     def list(self, pattern: str) -> List[str]:
         return sorted(p for p in self._resources if fnmatch.fnmatch(p, pattern))
 
     def delete(self, path: str):
-        self._resources.pop(path, None)
+        if self._resources.pop(path, None) is not None:
+            self.seq += 1
 
 
 class ServerCommunicator:

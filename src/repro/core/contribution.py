@@ -10,12 +10,11 @@ Three measures, cheapest to priciest:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.aggregation import fedavg
 

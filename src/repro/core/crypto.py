@@ -14,8 +14,9 @@ import hashlib
 import hmac
 import os
 import secrets
-import struct
 import zlib
+
+import numpy as np
 
 
 def derive_key(master: bytes, purpose: str) -> bytes:
@@ -29,18 +30,36 @@ def _keystream(key: bytes, nonce: bytes, n: int) -> bytes:
 
 
 def _xor(data: bytes, stream: bytes) -> bytes:
-    import numpy as np
     a = np.frombuffer(data, np.uint8)
     b = np.frombuffer(stream, np.uint8)
     return (a ^ b).tobytes()
 
 
-def encrypt(key: bytes, plaintext: bytes, *, compress: bool = True) -> bytes:
+# auto-compression probe: payloads above this size get a prefix sampled and
+# test-compressed; a ratio worse than _PROBE_RATIO means "mostly
+# incompressible" (fp32 weight bytes) and compression is skipped entirely
+_PROBE_BYTES = 64 * 1024
+_PROBE_RATIO = 0.9
+
+
+def _compression_pays(plaintext: bytes) -> bool:
+    head = plaintext[:_PROBE_BYTES]
+    return len(zlib.compress(head, 1)) < _PROBE_RATIO * len(head)
+
+
+def encrypt(key: bytes, plaintext: bytes, *, compress="auto") -> bytes:
     """zlib-compress, encrypt (SHAKE-256 stream), authenticate (HMAC-SHA256).
 
-    Large payloads (model weights) use zlib level 1 — they are mostly
-    incompressible float bytes and level 6 costs minutes on them.
+    ``compress="auto"`` (default) samples a 64KB prefix before touching a
+    large payload: masked fp32 weight buffers are near-incompressible, and
+    running zlib over hundreds of MB to save ~1% used to dominate every
+    post. Small payloads (control messages) always compress at level 6;
+    large compressible ones at level 1. ``compress=True/False`` force the
+    old behaviour.
     """
+    if compress == "auto":
+        compress = (len(plaintext) <= _PROBE_BYTES
+                    or _compression_pays(plaintext))
     flags = b"\x01" if compress else b"\x00"
     if compress:
         level = 1 if len(plaintext) > 8 * 2 ** 20 else 6

@@ -60,6 +60,7 @@ DEFAULT_DECISIONS = {
     "secure_aggregation": True,
     "hyperparameter_search": None,    # or {"parameter": "lr", "values": []}
     "data_schema": None,              # negotiated data format (validation.py)
+    "priority": 0,                    # federation-scheduler admission rank
 }
 
 

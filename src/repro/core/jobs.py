@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 from repro.core.governance import GovernanceContract
 from repro.core.metadata import MetadataStore
@@ -45,6 +45,16 @@ class FLJob:
     #     run pauses with a recorded provenance reason.
     round_deadline_ticks: int = 0
     min_cohort: int = 1
+    # federation scheduler (DESIGN.md §Federation scheduler):
+    #   priority — admission-queue rank; higher admits first, ties FIFO.
+    #     Negotiable through governance like any other contract parameter.
+    #   gc_round_resources — let the Run Manager delete a round's spent
+    #     board resources (updates, repairs, prior-round globals) once the
+    #     aggregate is committed; keeps the board's memory bounded when
+    #     many jobs run concurrently. Off by default: single-job tests and
+    #     post-hoc audits read round resources after completion.
+    priority: int = 0
+    gc_round_resources: bool = False
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -108,6 +118,8 @@ class JobCreator:
             reduced=bool(d.get("reduced", True)),
             round_deadline_ticks=int(d.get("round_deadline_ticks", 0)),
             min_cohort=int(d.get("min_cohort", 1)),
+            priority=int(d.get("priority", 0)),
+            gc_round_resources=bool(d.get("gc_round_resources", False)),
         )
 
     def _validate(self, d: dict):

@@ -9,13 +9,19 @@ Two record families, per Peregrina et al. [17] as adopted by FL-APU:
 The store is append-only (trace integrity) with a hash chain over records so
 tampering is detectable — the "traceability of governance decisions and
 tracking of training processes" the paper calls out in the abstract.
+
+A file-backed store (``path=...``) is durable across process restarts:
+``__init__`` reloads the JSONL trail and chains new records onto the last
+persisted hash, so ``verify_chain()`` attests one unbroken trail spanning
+every server incarnation that wrote to the file.
 """
 from __future__ import annotations
 
 import hashlib
 import json
+import os
 import time
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 
 class MetadataStore:
@@ -23,6 +29,25 @@ class MetadataStore:
         self._records: List[dict] = []
         self._path = path
         self._last_hash = "0" * 64
+        if path and os.path.exists(path):
+            self.load(path)
+
+    def load(self, path: str):
+        """Reload a persisted JSONL trail (server restart): records are
+        adopted verbatim — hashes included — so the chain head continues
+        where the dead process stopped. Raises if the file is not the
+        prefix-intact trail this store would have written."""
+        if self._records:
+            raise RuntimeError("load() only into an empty store")
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    self._records.append(json.loads(line))
+        if self._records:
+            self._last_hash = self._records[-1]["hash"]
+        if not self.verify_chain():
+            raise ValueError(f"hash chain in {path} is broken or tampered")
 
     # ------------------------------------------------------------------
     def _append(self, record: dict) -> dict:

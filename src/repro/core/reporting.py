@@ -5,7 +5,7 @@ Builds the FL-run report the Governance & Management Website displays
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from repro.core.metadata import MetadataStore
 

@@ -94,12 +94,36 @@ class RunState:
     outer_state: Any = None
 
 
+@dataclass(frozen=True)
+class WakeCondition:
+    """What a run is waiting for (DESIGN.md §Federation scheduler).
+
+    ``paths``: board resources whose appearance/overwrite should wake the
+    run — the scheduler compares their mutation counters against a
+    snapshot instead of blindly ticking. ``poll=True``: the run has work
+    to do (or deadlines to count) on every scheduler pass. A terminal run
+    returns ``None`` — never wake again.
+    """
+    paths: tuple = ()
+    poll: bool = False
+
+
 class FLServer:
     def __init__(self, master_key: bytes, metadata: Optional[MetadataStore]
-                 = None, server_id: str = "fl-server", seed: int = 0):
-        self.metadata = metadata or MetadataStore()
-        self.clients = ClientManagement(self.metadata)
-        self.board = MessageBoard(self.clients, self.metadata)
+                 = None, server_id: str = "fl-server", seed: int = 0, *,
+                 clients: Optional[ClientManagement] = None,
+                 board: Optional[MessageBoard] = None):
+        """Standalone by default; pass shared ``clients``/``board``/
+        ``metadata`` to run many FLServer state machines over one silo
+        fleet and one message board (the federation scheduler does).
+
+        ``is None`` checks, not truthiness: an empty shared MetadataStore
+        has ``len() == 0`` and must still be adopted, not replaced."""
+        self.metadata = MetadataStore() if metadata is None else metadata
+        self.clients = (ClientManagement(self.metadata) if clients is None
+                        else clients)
+        self.board = (MessageBoard(self.clients, self.metadata)
+                      if board is None else board)
         self.comm = ServerCommunicator(self.board, master_key, server_id)
         self.job_creator = JobCreator(self.metadata)
         self.store = ModelStore(self.metadata)
@@ -120,13 +144,28 @@ class FLServer:
     # ------------------------------------------------------------------
     # Run lifecycle
     # ------------------------------------------------------------------
-    def start_run(self, job: FLJob) -> str:
-        run_id = f"run-{uuid.uuid4().hex[:8]}"
-        self.run = RunState(run_id=run_id, job=job,
-                            cohort=self.clients.active_clients())
+    def start_run(self, job: FLJob, *, run_id: Optional[str] = None,
+                  cohort: Optional[List[str]] = None,
+                  rotate_tokens: bool = True) -> str:
+        """Open a run. ``cohort`` restricts it to a subset of the fleet
+        (default: every active client); ``rotate_tokens=False`` keeps
+        existing device tokens alive — required when the silos are
+        multiplexed across concurrent runs by the federation scheduler
+        (a rotation here would cut off their other jobs mid-round)."""
+        run_id = run_id or f"run-{uuid.uuid4().hex[:8]}"
+        active = self.clients.active_clients()
+        cohort = sorted(cohort) if cohort is not None else active
+        unknown = [c for c in cohort if c not in active]
+        if unknown:
+            raise RuntimeError(f"cohort members not active: {unknown}")
+        self.run = RunState(run_id=run_id, job=job, cohort=list(cohort))
         if not self.run.cohort:
             raise RuntimeError("no active clients in the registry")
-        tokens = self.clients.issue_tokens(run_id)
+        if rotate_tokens:
+            self.clients.issue_tokens(run_id)
+        else:
+            for cid in cohort:
+                self.clients.ensure_token(cid)
         self.metadata.record_run_start(run_id, job.to_dict())
         # initial global model
         model = build_model(self._arch_cfg(job))
@@ -184,6 +223,43 @@ class FLServer:
                 self.run.phase_ticks = 0
             self._publish_status()
         return self.run.phase
+
+    def wake_condition(self) -> Optional[WakeCondition]:
+        """What would make the next ``tick()`` do useful work.
+
+        Polling phases waiting on per-client posts return the missing
+        board paths so an event-driven scheduler only ticks this server
+        when one of them lands. Phases with immediate work (distribute,
+        deploying) and runs with a round deadline (phase_ticks must count
+        real poll cycles for the dropout machinery) ask to be polled every
+        pass. Terminal phases return ``None``: never wake.
+        """
+        r = self.run
+        if r is None:
+            return WakeCondition(poll=True)          # ready to start a run
+        if r.phase in ("done", "paused"):
+            return None
+        if r.job.round_deadline_ticks:
+            return WakeCondition(poll=True)          # deadlines count polls
+        base = f"runs/{r.run_id}"
+        rd = f"{base}/round/{r.hp_index}/{r.round}"
+        # no "repair" entry: the repair phase is only reachable through a
+        # cohort shrink, which requires round_deadline_ticks — and those
+        # runs already short-circuited to poll=True above
+        per_client = {
+            "waiting_clients": lambda cid: f"{base}/hello/{cid}",
+            "validating": lambda cid: f"{base}/validation/{cid}",
+            "collect": lambda cid: f"{rd}/update/{cid}",
+            "evaluate": lambda cid: f"{rd}/eval/{cid}",
+        }.get(r.phase)
+        if per_client is None or (r.phase == "validating"
+                                  and r.job.data_schema is None):
+            return WakeCondition(poll=True)
+        missing = [cid for cid in r.cohort
+                   if self.board.stat(per_client(cid)) is None]
+        if not missing:
+            return WakeCondition(poll=True)          # everything arrived
+        return WakeCondition(paths=tuple(per_client(c) for c in missing))
 
     # --- liveness / deadline bookkeeping ------------------------------
     def _refresh_heartbeats(self):
@@ -311,8 +387,25 @@ class FLServer:
         else:
             r.phase = "distribute"
 
+    def _gc_rounds_before(self, hp: int, rnd: int):
+        """Delete spent board resources of rounds strictly before
+        ``(hp, rnd)`` (job.gc_round_resources): their evals were consumed,
+        their globals redistributed — only the current round's resources
+        are live. Keeps board memory bounded under many concurrent jobs."""
+        r = self.run
+        for path in self.board.list(f"runs/{r.run_id}/round/*"):
+            parts = path.split("/")
+            try:
+                key = (int(parts[3]), int(parts[4]))
+            except (IndexError, ValueError):
+                continue
+            if key < (hp, rnd):
+                self.board.delete(path)
+
     def _tick_distribute(self):
         r = self.run
+        if r.job.gc_round_resources:
+            self._gc_rounds_before(r.hp_index, r.round)
         r.round_cohort = list(r.cohort)
         params = self.store.get(r.global_digest)
         self.comm.publish(
@@ -459,6 +552,14 @@ class FLServer:
         r.history.append({"round": r.round, "hp_index": r.hp_index,
                           **metrics, "digest": digest})
         r.global_digest = digest
+        if job.gc_round_resources:
+            # the round's updates (and any repair corrections) are spent
+            # the moment the aggregate is committed — they are the bulk of
+            # the board's bytes, so free them immediately
+            base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+            for pattern in (f"{base}/update/*", f"{base}/repair/*"):
+                for path in self.board.list(pattern):
+                    self.board.delete(path)
         r.phase = "evaluate"
 
     def _tick_evaluate(self):
@@ -535,6 +636,23 @@ class FLServer:
         self.metadata.record_provenance(
             actor=admin, operation="force_deploy", subject=digest,
             outcome="published")
+
+    def pause(self, actor: str, reason: str):
+        """Externally pause a live run (scheduler preemption, operator
+        intervention). The run lands in the same ``paused`` state the
+        dropout/validation machinery uses, so ``admin_resume`` restores it
+        with the usual re-run-or-continue semantics — a preempted masked
+        round is re-collected against the surviving cohort, never resumed
+        from stale updates."""
+        r = self.run
+        if r is None or r.phase in ("done", "paused"):
+            return
+        r.phase = "paused"
+        r.pause_reason = reason
+        self.metadata.record_provenance(
+            actor=actor, operation="pause_run", subject=r.run_id,
+            outcome="paused", details={"reason": reason})
+        self._publish_status()
 
     def admin_resume(self, admin: str):
         if self.run and self.run.phase == "paused":

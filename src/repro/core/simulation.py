@@ -1,27 +1,33 @@
 """Consortium builder + cooperative driver for in-process FL simulations.
 
-Wires an FLServer and N FLClientNodes through the shared MessageBoard and
-runs the pull-based protocol to completion. Used by tests, examples and
-benchmarks — the same components a multi-host deployment would run behind
-REST endpoints.
+Wires N organizations and one FLServer through a ``FederationScheduler``
+and runs the pull-based protocol to completion. Since the scheduler became
+the runtime (DESIGN.md §Federation scheduler), the Consortium is a thin
+single-job wrapper over it: the same admission, wake-condition loop and
+provenance trail drive one job here and sixteen in ``bench_multi_job``.
+Used by tests, examples and benchmarks — the same components a multi-host
+deployment would run behind REST endpoints.
 """
 from __future__ import annotations
 
 import secrets
-from typing import Callable, List, Optional
+from typing import List, Optional
 
-from repro.core.client import ClientConfig, FLClientNode
-from repro.core.communicator import ClientCommunicator
+from repro.core.client import ClientConfig
 from repro.core.jobs import FLJob
 from repro.core.metadata import MetadataStore
-from repro.core.server import FLServer
+from repro.core.scheduler import FederationScheduler
 
 
 class Consortium:
     def __init__(self, organizations: List[str], *, seed: int = 0,
-                 master_key: Optional[bytes] = None):
+                 master_key: Optional[bytes] = None,
+                 metadata_path: Optional[str] = None):
         self.master_key = master_key or secrets.token_bytes(32)
-        self.server = FLServer(self.master_key, seed=seed)
+        metadata = MetadataStore(path=metadata_path) if metadata_path else None
+        self.scheduler = FederationScheduler(self.master_key,
+                                             metadata=metadata)
+        self.server = self.scheduler.new_server(seed=seed)
         self.organizations = organizations
         self.admin = "server-admin"
         self.server.clients.create_user(
@@ -36,7 +42,8 @@ class Consortium:
             cid = self.server.clients.request_registration(user, org)
             self.server.clients.approve_client(self.admin, cid)
             self.client_ids[org] = cid
-        self.nodes: List[FLClientNode] = []
+        self.nodes = []
+        self.run_id: Optional[str] = None
 
     # ------------------------------------------------------------------
     def negotiate(self, decisions: dict):
@@ -52,20 +59,23 @@ class Consortium:
 
     def start(self, job: FLJob, datasets, *,
               client_config: Optional[ClientConfig] = None):
-        run_id = self.server.start_run(job)
-        cohort = self.server.clients.active_clients()
-        self.nodes = []
+        datasets_by_cid = {}
         for org, ds in zip(self.organizations, datasets):
             cid = self.client_ids[org]
-            token = self.server.clients.registry[cid].token
-            comm = ClientCommunicator(
-                self.server.board, cid, token,
-                channel_key=self.server.comm.channel_key(cid),
-                broadcast_key=self.server.comm.broadcast_key(),
-                ca_key=self.master_key)
-            self.nodes.append(FLClientNode(
-                cid, comm, ds, run_id, cohort, self.server.pair_secret,
-                config=client_config))
+            if cid not in self.scheduler.agents:
+                self.scheduler.register_agent(cid, ds, capacity=1,
+                                              config=client_config)
+            datasets_by_cid[cid] = ds
+        run_id = self.scheduler.submit(
+            job, server=self.server,
+            cohort=[self.client_ids[o] for o in self.organizations],
+            datasets=datasets_by_cid, client_config=client_config)
+        entry = self.scheduler.entries[run_id]
+        if entry.state != "running":        # single job over a fresh fleet
+            raise RuntimeError(f"job was not admitted: {entry.state}")
+        self.run_id = run_id
+        self.nodes = [self.scheduler.agents[self.client_ids[org]].node(run_id)
+                      for org in self.organizations]
         return run_id
 
     def _cid(self, org_or_cid: str) -> str:
@@ -73,37 +83,41 @@ class Consortium:
 
     def run_to_completion(self, max_ticks: int = 10_000,
                           drop_at: Optional[dict] = None) -> str:
-        """Drive server and clients until a terminal phase.
+        """Drive the scheduler until this consortium's job is terminal.
 
         ``drop_at`` injects client dropout: ``{org_or_client_id: when}``
-        where ``when`` is either an absolute tick index (int) or a
-        ``(phase, round)`` tuple — the node stops ticking (vanishes, no
-        farewell message) the first time the server reports that phase at
-        that round. E.g. ``{"solarx": ("collect", 1)}`` kills solarx
-        right as round 1's collect opens, before it can post its update.
+        where ``when`` is either an absolute pass index (int) or a
+        ``(phase, round)`` tuple — the silo stops serving the run
+        (vanishes, no farewell message) the first time the server reports
+        that phase at that round. E.g. ``{"solarx": ("collect", 1)}``
+        kills solarx right as round 1's collect opens, before it can post
+        its update.
         """
+        sched, run_id = self.scheduler, self.run_id
+        entry = sched.entries[run_id]
+        if (entry.state == "suspended"
+                and self.server.run.phase != "paused"):
+            sched.reactivate(run_id)        # admin resumed a paused run
         specs = {self._cid(k): v for k, v in (drop_at or {}).items()}
         dead = set()
         for t in range(max_ticks):
-            phase = self.server.tick()
-            run = self.server.run
-            for cid, when in specs.items():
-                if cid in dead:
-                    continue
-                if isinstance(when, int):
-                    if t >= when:
+            def on_phase(rid, phase, _t=t):
+                if rid != run_id:
+                    return
+                run = self.server.run
+                for cid, when in specs.items():
+                    if cid in dead:
+                        continue
+                    if isinstance(when, int):
+                        if _t >= when:
+                            dead.add(cid)
+                            sched.drop_client(run_id, cid)
+                    elif run is not None and phase == when[0] \
+                            and run.round == when[1]:
                         dead.add(cid)
-                elif run is not None and phase == when[0] \
-                        and run.round == when[1]:
-                    dead.add(cid)
-            for node in self.nodes:
-                if node.client_id in dead:
-                    continue
-                node.tick()
+                        sched.drop_client(run_id, cid)
+            sched.step(on_phase=on_phase)
+            phase = self.server.run.phase
             if phase in ("done", "paused"):
-                # let clients observe the terminal state once more
-                for node in self.nodes:
-                    if node.client_id not in dead:
-                        node.tick()
                 return phase
         raise RuntimeError("run did not converge within tick budget")

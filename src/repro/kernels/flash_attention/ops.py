@@ -4,7 +4,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro import kernels
 from repro.kernels.flash_attention import kernel as _k

@@ -12,7 +12,6 @@ N=128 (mamba2-780m's shapes).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

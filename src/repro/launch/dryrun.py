@@ -35,7 +35,7 @@ from repro.launch.roofline_model import traffic_bytes
 from repro.models import build_model
 from repro.optim import adamw
 from repro.sharding import cache_pspecs, param_pspecs
-from repro.training import fedavg_pod_params, make_train_step
+from repro.training import make_train_step
 
 N_PODS = 2
 

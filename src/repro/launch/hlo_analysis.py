@@ -9,10 +9,9 @@ be classified intra-pod (ICI) vs cross-pod (DCN) for the multi-pod mesh.
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
-from typing import Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 

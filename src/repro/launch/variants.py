@@ -24,18 +24,17 @@ from __future__ import annotations
 
 import os
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, get_shape
+from repro.configs import get_config
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.sharding import param_pspecs
-from repro.training import fedavg_pod_params, make_fedavg_pod_step
+from repro.training import fedavg_pod_params
 
 N_PODS = 2
 

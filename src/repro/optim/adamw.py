@@ -7,7 +7,6 @@ of compute dtype.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
 import jax

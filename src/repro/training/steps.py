@@ -9,7 +9,6 @@ Aggregator, lowered to ICI/DCN.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

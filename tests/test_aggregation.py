@@ -2,8 +2,6 @@
 import numpy as np
 import pytest
 
-import jax
-import jax.numpy as jnp
 
 from repro.core import secure_agg
 from repro.core.aggregation import (aggregate, coordinate_median, fedavg,

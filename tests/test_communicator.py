@@ -42,6 +42,46 @@ def test_crypto_roundtrip_and_tamper():
         crypto.decrypt(crypto.derive_key(MASTER, "other"), blob)
 
 
+def test_encrypt_auto_skips_compression_on_incompressible():
+    """Masked fp32 weight payloads are near-random bytes: auto mode must
+    probe the prefix and skip zlib entirely (flag byte 0x00), while still
+    compressing text-like payloads — and both roundtrip."""
+    key = crypto.derive_key(MASTER, "auto")
+    rng = np.random.default_rng(0)
+    weights = rng.standard_normal(2 ** 20).astype(np.float32).tobytes()
+    blob = crypto.encrypt(key, weights)                  # default: auto
+    assert blob[32:33] == b"\x00"                        # skipped zlib
+    assert crypto.decrypt(key, blob) == weights
+    text = b"the same phrase repeats " * 100_000
+    blob_t = crypto.encrypt(key, text)
+    assert blob_t[32:33] == b"\x01"                      # compressed
+    assert len(blob_t) < len(text) // 10
+    assert crypto.decrypt(key, blob_t) == text
+    # forced modes still respected
+    assert crypto.encrypt(key, weights, compress=True)[32:33] == b"\x01"
+    assert crypto.encrypt(key, text, compress=False)[32:33] == b"\x00"
+
+
+def test_board_mutation_seq_and_latest_seq():
+    """Wake conditions hang off the board's monotonic mutation counter:
+    every put/overwrite/delete bumps it, and latest_seq answers 'did any
+    of these paths change since snapshot S' without decryption."""
+    board, server, client, cid, token = make_stack()
+    snap = board.seq
+    assert board.latest_seq(["runs/r/u/a", "runs/r/u/b"]) == 0
+    client.post("runs/r/u/a", {"x": 1})
+    assert board.latest_seq(["runs/r/u/a", "runs/r/u/b"]) > snap
+    snap2 = board.seq
+    client.post("runs/r/u/b", {"x": 2})
+    assert board.latest_seq(["runs/r/u/a"]) <= snap2     # a unchanged
+    assert board.latest_seq(["runs/r/u/b"]) > snap2
+    client.post("runs/r/u/a", {"x": 3})                  # overwrite bumps
+    assert board.latest_seq(["runs/r/u/a"]) > snap2
+    seq_before_delete = board.seq
+    board.delete("runs/r/u/a")
+    assert board.seq > seq_before_delete                 # deletes count too
+
+
 def test_serialization_pytree_roundtrip():
     tree = {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
             "meta": {"n": 3, "name": "x"},

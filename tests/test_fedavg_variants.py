@@ -1,7 +1,6 @@
 """Multi-pod FedAvg aggregation variants (EXPERIMENTS §Perf iteration 6)."""
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.training import fedavg_pod_params, make_fedavg_pod_step

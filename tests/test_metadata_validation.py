@@ -4,7 +4,7 @@ import pytest
 
 from repro.checkpoint import load_checkpoint, pytree_digest, save_checkpoint
 from repro.core.metadata import MetadataStore
-from repro.core.reporting import client_report, governance_report, run_report
+from repro.core.reporting import run_report
 from repro.core.validation import (DataSchema, apply_preprocessing,
                                    validate_stats)
 
@@ -17,6 +17,67 @@ def test_chain_integrity_and_tamper_detection():
     assert md.verify_chain()
     md._records[1]["job"] = {"arch": "tampered"}
     assert not md.verify_chain()
+
+
+def test_reload_continues_chain_across_restart(tmp_path):
+    """Kill the store mid-run and reconstruct it from its JSONL trail: the
+    reloaded store must adopt the persisted records, chain new ones onto
+    the old head, and verify as ONE unbroken trail."""
+    path = str(tmp_path / "trail.jsonl")
+    md = MetadataStore(path=path)
+    md.record_run_start("r1", {"arch": "x"})
+    md.record_round("r1", 0, {"loss": 2.0}, "d0")
+    md.record_provenance("run_manager", "client_dropped", "c9", "dropped",
+                         details={"round": 0})
+    head = md._last_hash
+    del md                                   # process dies mid-run
+
+    md2 = MetadataStore(path=path)           # restart: reload from disk
+    assert len(md2) == 3
+    assert md2._last_hash == head
+    md2.record_round("r1", 1, {"loss": 1.0}, "d1")
+    md2.record_run_end("r1", "completed", "d1")
+    assert md2.verify_chain()                # spans both incarnations
+    assert md2.runs() == ["r1"]
+    assert len(md2.run_history("r1")) == 4
+
+    md3 = MetadataStore(path=path)           # and again, after the append
+    assert len(md3) == 5
+    assert md3.verify_chain()
+
+
+def test_reload_rejects_tampered_trail(tmp_path):
+    path = str(tmp_path / "trail.jsonl")
+    md = MetadataStore(path=path)
+    md.record_provenance("a", "op", "s", "ok")
+    md.record_provenance("b", "op", "s", "ok")
+    lines = open(path).read().splitlines()
+    lines[0] = lines[0].replace('"ok"', '"forged"')
+    open(path, "w").write("\n".join(lines) + "\n")
+    with pytest.raises(ValueError, match="chain"):
+        MetadataStore(path=path)
+
+
+def test_reload_spans_full_consortium_run(tmp_path):
+    """End to end: a consortium writes its trail through a file-backed
+    store; a fresh store reconstructed from that file attests the whole
+    run — governance, scheduling decisions, rounds — with the chain
+    intact."""
+    from repro.core import Consortium
+    from repro.data import make_silo_datasets
+    path = str(tmp_path / "server.jsonl")
+    con = Consortium(["a", "b"], seed=0, metadata_path=path)
+    contract = con.negotiate({"arch": "fedforecast-100m", "rounds": 1,
+                              "local_steps": 1, "batch_size": 2,
+                              "data_schema": None})
+    job = con.server.job_creator.from_contract(contract)
+    con.start(job, make_silo_datasets(2, vocab=512, seq_len=32, seed=0))
+    assert con.run_to_completion() == "done"
+    reborn = MetadataStore(path=path)
+    assert reborn.verify_chain()
+    assert len(reborn) == len(con.server.metadata)
+    ops = {r["operation"] for r in reborn.query(kind="provenance")}
+    assert {"admit_job", "complete_job", "finalize_contract"} <= ops
 
 
 def test_experiment_tracking_queries():

@@ -7,7 +7,6 @@ prefill+decode step per arch.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from conftest import make_batch

@@ -79,7 +79,6 @@ def test_forecast_dataset_shapes():
 
 
 def test_sharding_rules_divisibility():
-    import os
     # pure-spec test: fabricate a mesh-shape-like object
     from repro.sharding.specs import _leaf_spec
     from jax.sharding import PartitionSpec as P

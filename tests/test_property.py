@@ -5,7 +5,6 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import crypto, secure_agg

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.core import secure_agg
 from repro.core.aggregation import aggregate_packed
-from repro.core.packing import PackedLayout, pack_many, pack_pytree
+from repro.core.packing import pack_many, pack_pytree
 from repro.kernels.secure_agg.kernel import masked_sum_flat
 from repro.kernels.secure_agg.ops import masked_sum
 from repro.kernels.secure_agg.ref import masked_sum_ref
