@@ -21,10 +21,13 @@ from repro.core.jobs import FLJob, JobCreator  # noqa: F401
 from repro.core.metadata import MetadataStore  # noqa: F401
 from repro.core.packing import (PackedLayout, pack_many, pack_pytree,
                                 unpack_pytree)  # noqa: F401
+from repro.core.protocol import (PROTOCOLS, AsyncBuffProtocol, Phase,
+                                 Protocol, SyncProtocol, WakeCondition,
+                                 make_protocol,
+                                 staleness_weight)  # noqa: F401
 from repro.core.scheduler import (FederationScheduler,
                                   JobEntry)  # noqa: F401
-from repro.core.server import (FLServer, ModelStore,
-                               WakeCondition)  # noqa: F401
+from repro.core.server import FLServer, ModelStore  # noqa: F401
 from repro.core.simulation import Consortium  # noqa: F401
 from repro.core.validation import (DataSchema, ValidationResult,
                                    validate_stats)  # noqa: F401

@@ -110,7 +110,10 @@ class FLClientNode:
         self.cohort = sorted(cohort)
         self.pair_secret = pair_secret
         self.config = config or ClientConfig()
-        self.metadata = metadata or MetadataStore()   # client-local DB
+        # `is None`, not truthiness: the agent shares its (possibly still
+        # empty, hence falsy) store across this silo's nodes — replacing
+        # it would split the silo's provenance trail per run
+        self.metadata = MetadataStore() if metadata is None else metadata
         # pipeline state
         self.job: Optional[FLJob] = None
         self.model = None
@@ -189,6 +192,8 @@ class FLClientNode:
             return self._do_round(status)
         if phase == "repair":
             return self._do_repair(status)
+        if phase == "async_serve":
+            return self._do_async(status)
         if phase == "evaluate":
             return self._do_eval(status)
         if phase == "done":
@@ -216,6 +221,29 @@ class FLClientNode:
             batch = apply_preprocessing(batch, self.job.preprocessing)
         return {k: jnp.asarray(v) for k, v in batch.items()}
 
+    def _train_local(self, base_params, lr: float):
+        """Model Trainer: the job's local steps on private data, from
+        ``base_params``. Returns ``(params, loss, n_examples)`` —
+        n_examples is the nominal training budget capped by the silo's
+        declared dataset size (a silo smaller than the budget carries
+        proportionally less FedAvg weight; for masked rounds its
+        pre-scale factor stays <= 1, so masking strength is preserved).
+        Shared by the sync round and the async continuous loop, so the
+        two protocols can never drift on training/weighting semantics."""
+        opt, train_step = self._get_step(lr)
+        params = base_params
+        opt_state = opt.init(params)
+        loss = np.nan
+        for _ in range(self.job.local_steps):
+            batch = self._local_batch()
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            loss = float(metrics["loss"])
+        n_examples = self.job.local_steps * self.job.batch_size
+        declared = getattr(self.dataset, "n_examples", None)
+        if declared is not None:             # 0 means a truly empty silo
+            n_examples = min(n_examples, int(declared))
+        return params, loss, n_examples
+
     def _do_round(self, status) -> str:
         rnd, hp = status["round"], status["hp_index"]
         if self.round_done >= rnd and self.hp_seen == hp:
@@ -224,24 +252,9 @@ class FLClientNode:
         msg = self.comm.fetch(f"{base}/global", broadcast=True)
         if msg is None:
             return "waiting_global"
-        params = jax.tree.map(jnp.asarray, msg["params"])
-        lr = float(status.get("lr", self.job.lr))
-        opt, train_step = self._get_step(lr)
-        opt_state = opt.init(params)
-        # --- Model Trainer: local steps on private data ----------------
-        loss = np.nan
-        for _ in range(self.job.local_steps):
-            batch = self._local_batch()
-            params, opt_state, metrics = train_step(params, opt_state, batch)
-            loss = float(metrics["loss"])
-        # examples contributed this round: the nominal training budget,
-        # capped by the silo's declared dataset size — a silo smaller than
-        # the budget carries proportionally less FedAvg weight (and its
-        # pre-scale factor stays <= 1, so masking strength is preserved)
-        n_examples = self.job.local_steps * self.job.batch_size
-        declared = getattr(self.dataset, "n_examples", None)
-        if declared is not None:             # 0 means a truly empty silo
-            n_examples = min(n_examples, int(declared))
+        params, loss, n_examples = self._train_local(
+            jax.tree.map(jnp.asarray, msg["params"]),
+            float(status.get("lr", self.job.lr)))
         if self.job.secure_aggregation:
             # packed data plane: flatten once, mask the whole buffer in one
             # vectorized pass, post the (T,) fp32 buffer — the server never
@@ -272,6 +285,36 @@ class FLClientNode:
             subject=f"{self.run_id}/r{rnd}", outcome="update_posted",
             details={"loss": loss, "masked": self.job.secure_aggregation})
         return "update_posted"
+
+    def _do_async(self, status) -> str:
+        """Continuous-train loop for async buffered jobs (DESIGN.md
+        §Protocol programs): every tick, fetch the *latest committed*
+        global (the commit index rides the status resource), run the
+        local steps, and post the packed parameter *delta* tagged with
+        the commit it was trained from — the server discounts it by how
+        far the global has moved by the time it folds it. No per-round
+        done-marker: an async client trains as fast as its own poll
+        cadence allows, which is exactly the heterogeneity the protocol
+        absorbs (fast silos contribute more updates, slow silos' stale
+        updates are down-weighted, nobody stalls anybody)."""
+        rnd, hp = status["round"], status["hp_index"]
+        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        msg = self.comm.fetch(f"{base}/global", broadcast=True)
+        if msg is None:
+            return "waiting_global"
+        base_params = jax.tree.map(jnp.asarray, msg["params"])
+        params, loss, n_examples = self._train_local(
+            base_params, float(status.get("lr", self.job.lr)))
+        from repro.core.protocol import pack_delta
+        self.comm.post(f"runs/{self.run_id}/async/update/{self.client_id}",
+                       {"delta": pack_delta(params, base_params),
+                        "base_commit": rnd, "n_examples": n_examples,
+                        "train_loss": loss})
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="local_train_async",
+            subject=f"{self.run_id}/c{rnd}", outcome="update_posted",
+            details={"loss": loss, "base_commit": rnd})
+        return "async_update_posted"
 
     def _do_repair(self, status) -> str:
         """Dropout repair (DESIGN.md §Dropout-tolerant rounds): re-derive

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import fnmatch
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -47,17 +48,28 @@ class MessageBoard:
     ``runs/<run_id>/...`` namespace.
     """
 
+    # Deleted paths keep their deletion seq so latest_seq watchers observe
+    # round GC like any overwrite. Round paths are uniquely named, so the
+    # tombstone map is LRU-bounded: evicted entries collapse into a floor
+    # seq that unknown paths report — over-reporting only ever causes one
+    # spurious (safe, cheap) wake for a watcher whose snapshot predates the
+    # eviction, never a lost wake.
+    TOMBSTONE_CAP = 4096
+
     def __init__(self, clients: ClientManagement, metadata: MetadataStore):
         self.clients = clients
         self.metadata = metadata
         self._resources: Dict[str, Resource] = {}
+        self._tombstones: "OrderedDict[str, int]" = OrderedDict()
+        self._tombstone_floor = 0         # max seq among evicted tombstones
         self.seq = 0                      # monotonic board mutation counter
         self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
-                      "rejected": 0}
+                      "rejected": 0, "deletes": 0}
 
     def _put(self, path: str, blob: bytes, author: str):
         prev = self._resources.get(path)
         self.seq += 1
+        self._tombstones.pop(path, None)   # a re-created path is live again
         self._resources[path] = Resource(
             path, blob, author, version=prev.version + 1 if prev else 1,
             seq=self.seq)
@@ -93,25 +105,44 @@ class MessageBoard:
                 "version": r.version, "bytes": len(r.blob)}
 
     def latest_seq(self, paths) -> int:
-        """Largest mutation counter among ``paths`` (0 if none exist).
+        """Largest mutation counter among ``paths`` (0 if none were ever
+        written).
 
         Metadata-only, like ``stat``: lets a scheduler ask "did anything
         this run is waiting for appear/change since snapshot S?" in O(len
         (paths)) dict lookups, with no decryption and no polling of the
-        payloads themselves."""
+        payloads themselves. A deleted path counts with the seq of its
+        *deletion* (per-path tombstone): a wake snapshot taken before a
+        round GC must observe that the resource changed, or the watcher
+        would sleep on a path that no longer exists. Paths whose tombstone
+        was LRU-evicted report the eviction floor — at worst one spurious
+        wake for a very stale watcher, never a missed one."""
         latest = 0
         for path in paths:
             r = self._resources.get(path)
-            if r is not None and r.seq > latest:
-                latest = r.seq
+            seq = (r.seq if r is not None
+                   else self._tombstones.get(path, self._tombstone_floor))
+            if seq > latest:
+                latest = seq
         return latest
 
     def list(self, pattern: str) -> List[str]:
         return sorted(p for p in self._resources if fnmatch.fnmatch(p, pattern))
 
     def delete(self, path: str):
+        """Remove a resource, leaving a per-path trace: the deletion bumps
+        the board seq AND records it as the path's tombstone seq, so
+        ``latest_seq`` watchers observe deletions exactly like overwrites
+        (round GC must not let wake snapshots go stale). The tombstone map
+        is bounded (``TOMBSTONE_CAP``): evictions fold into the floor."""
         if self._resources.pop(path, None) is not None:
             self.seq += 1
+            self._tombstones[path] = self.seq
+            self._tombstones.move_to_end(path)
+            while len(self._tombstones) > self.TOMBSTONE_CAP:
+                _, evicted = self._tombstones.popitem(last=False)
+                self._tombstone_floor = max(self._tombstone_floor, evicted)
+            self.stats["deletes"] += 1
 
 
 class ServerCommunicator:

@@ -61,6 +61,8 @@ DEFAULT_DECISIONS = {
     "hyperparameter_search": None,    # or {"parameter": "lr", "values": []}
     "data_schema": None,              # negotiated data format (validation.py)
     "priority": 0,                    # federation-scheduler admission rank
+    "protocol": "sync",               # sync | async_buff (protocol programs)
+    "async_buffer_size": 4,           # async_buff: updates folded per commit
 }
 
 

@@ -55,6 +55,18 @@ class FLJob:
     #     post-hoc audits read round resources after completion.
     priority: int = 0
     gc_round_resources: bool = False
+    # protocol programs (DESIGN.md §Protocol programs):
+    #   protocol — which round protocol the Run Manager executes:
+    #     "sync" (the paper's synchronous flow) or "async_buff"
+    #     (FedBuff-style buffered asynchronous aggregation). Negotiable
+    #     through governance like any other contract parameter, and
+    #     recorded on the provenance chain with the rest of the job at
+    #     run start (traceability requirement).
+    #   async_buffer_size — async_buff only: number of client updates the
+    #     server folds (staleness-discounted) before committing a new
+    #     global model. job.rounds then counts *commits*.
+    protocol: str = "sync"
+    async_buffer_size: int = 4
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -120,6 +132,8 @@ class JobCreator:
             min_cohort=int(d.get("min_cohort", 1)),
             priority=int(d.get("priority", 0)),
             gc_round_resources=bool(d.get("gc_round_resources", False)),
+            protocol=d.get("protocol", "sync"),
+            async_buffer_size=int(d.get("async_buffer_size", 4)),
         )
 
     def _validate(self, d: dict):
@@ -147,3 +161,35 @@ class JobCreator:
             raise ValueError("round_deadline_ticks must be >= 0")
         if int(d.get("min_cohort", 1)) < 1:
             raise ValueError("min_cohort must be >= 1")
+        protocol = d.get("protocol", "sync")
+        from repro.core.protocol import PROTOCOLS
+        if protocol not in PROTOCOLS:
+            raise ValueError(f"unknown protocol {protocol!r}; known: "
+                             f"{sorted(PROTOCOLS)}")
+        if protocol == "async_buff":
+            # the server folds each update the moment it arrives, so it
+            # sees individual (unmasked) contributions by construction —
+            # pairwise masks cannot telescope across asynchronous folds
+            if secure:
+                self.metadata.record_provenance(
+                    actor="job_creator", operation="create_job",
+                    subject=protocol, outcome="rejected",
+                    details={"reason": "async_buff requires "
+                                       "secure_aggregation=False"})
+                raise ValueError(
+                    "protocol='async_buff' is incompatible with "
+                    "secure_aggregation=True: buffered folds consume "
+                    "updates one at a time, so pairwise masks never "
+                    "cancel (disable secure aggregation for async jobs)")
+            if agg != "fedavg":
+                raise ValueError(
+                    f"protocol='async_buff' folds a weighted linear "
+                    f"buffer (fedavg); aggregation={agg!r} is not "
+                    f"supported asynchronously")
+            if d.get("hyperparameter_search"):
+                raise ValueError(
+                    "protocol='async_buff' does not support "
+                    "hyperparameter_search (commits have no trial "
+                    "boundary to restart from)")
+            if int(d.get("async_buffer_size", 4)) < 1:
+                raise ValueError("async_buffer_size must be >= 1")

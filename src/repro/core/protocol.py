@@ -1,0 +1,712 @@
+"""Protocol programs: composable round protocols for the FL server.
+
+The paper describes the server as a *sequence of interaction phases* with
+the silos (§VI–§VIII); until this layer existed that sequence was
+hard-coded into ``FLServer`` as ``_tick_<phase>`` handlers plus a
+hand-maintained phase→wait-paths dict that had to be kept in sync with
+them by hand. This module turns the round shape into data:
+
+* a ``Phase`` is one interaction step — ``enter()`` runs once on
+  transition into the phase, ``poll()`` runs once per server tick and
+  returns the next phase name (or ``None`` to keep waiting), and
+  ``wait_paths()`` *declares* the board resources the phase blocks on, so
+  the executor can derive ``FLServer.wake_condition()`` instead of
+  maintaining a parallel table;
+* a ``Protocol`` composes named phases into a program and owns the
+  protocol-specific resume semantics (``resume()``);
+* ``FLServer`` shrinks to a thin executor: ``tick()`` polls the active
+  phase, applies the transition, publishes status.
+
+Two protocols ship:
+
+``SyncProtocol`` — the paper's synchronous flow, re-expressed as composed
+phases with behavior preserved (twin runs match the pre-refactor monolith
+≤ 1e-4): waiting_clients → validating → distribute → collect → [repair] →
+evaluate → (next round / hp restart) → deploying → done, with the
+dropout-deadline and mask-repair machinery of DESIGN.md §Dropout-tolerant
+rounds intact.
+
+``AsyncBuffProtocol`` — FedBuff-style buffered asynchronous aggregation
+(Nguyen et al., *Federated Learning with Buffered Asynchronous
+Aggregation*; the lever Huang et al. single out for heterogeneous-speed
+cross-silo fleets): clients train continuously against the latest
+committed global and post packed *delta* buffers tagged with the commit
+they trained from; the server folds updates the moment they arrive,
+discounted by staleness (``staleness_weight``), and commits a new global
+every ``job.async_buffer_size`` folds — slow silos never stall fast ones,
+and a straggler's late update still contributes, just discounted. Masks
+cannot telescope across asynchronous folds, so job creation rejects
+``secure_aggregation=True`` for this protocol (jobs.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.core.packing import PackedLayout, pack_pytree, unpack_pytree
+from repro.core.validation import DataSchema, validate_stats
+
+
+@dataclass(frozen=True)
+class WakeCondition:
+    """What a run is waiting for (DESIGN.md §Federation scheduler).
+
+    ``paths``: board resources whose appearance/overwrite should wake the
+    run — the scheduler compares their mutation counters against a
+    snapshot instead of blindly ticking. ``poll=True``: the run has work
+    to do (or deadlines to count) on every scheduler pass. A terminal run
+    returns ``None`` — never wake again.
+    """
+    paths: tuple = ()
+    poll: bool = False
+
+
+class Phase:
+    """One interaction step of a protocol program.
+
+    ``poll(server)`` advances the phase by one poll cycle and returns the
+    next phase name, or ``None`` to stay. Server helpers a phase calls
+    (``_poll_cohort``, ``_aggregate_and_advance``, ``_drop_clients``) may
+    transition the run directly (e.g. to ``paused``); such helper-set
+    transitions take precedence over the poll return value.
+
+    ``wait_paths(server)`` declares what the phase blocks on: a list of
+    board paths (the executor watches the missing ones), or ``None`` for
+    immediate work — poll me every pass. ``wake(server)`` turns that
+    declaration into the ``WakeCondition``; override it only when the
+    missing-path filter is wrong for the phase (async phases watch
+    *overwrites* of paths that already exist).
+    """
+
+    name: str = "?"
+    terminal: bool = False        # done/paused: never wake, reap
+
+    def enter(self, server) -> None:
+        """Runs once when the run transitions into this phase."""
+
+    def poll(self, server) -> Optional[str]:
+        raise NotImplementedError
+
+    def wait_paths(self, server) -> Optional[List[str]]:
+        return None               # default: immediate work, poll every pass
+
+    def wake(self, server) -> Optional[WakeCondition]:
+        if self.terminal:
+            return None
+        paths = self.wait_paths(server)
+        if paths is None:
+            return WakeCondition(poll=True)
+        missing = [p for p in paths if server.board.stat(p) is None]
+        if not missing:
+            return WakeCondition(poll=True)      # everything arrived
+        return WakeCondition(paths=tuple(missing))
+
+
+class Protocol:
+    """A named composition of phases plus protocol-level semantics."""
+
+    name: str = "?"
+    initial: str = "waiting_clients"
+
+    def __init__(self):
+        self.phases: Dict[str, Phase] = {}
+        for p in self.build_phases():
+            if p.name in self.phases:
+                raise ValueError(f"duplicate phase name {p.name!r}")
+            self.phases[p.name] = p
+
+    def build_phases(self) -> Sequence[Phase]:
+        raise NotImplementedError
+
+    def phase(self, name: str) -> Phase:
+        return self.phases[name]
+
+    def resume(self, server) -> str:
+        """Protocol-specific resume-from-paused bookkeeping; returns the
+        phase name to resume into (the executor transitions + records)."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# shared terminal / bootstrap phases
+# ---------------------------------------------------------------------------
+class PausedPhase(Phase):
+    name = "paused"
+    terminal = True
+
+    def poll(self, server):
+        return None                   # needs admin intervention
+
+
+class DonePhase(Phase):
+    name = "done"
+    terminal = True
+
+    def poll(self, server):
+        return None
+
+
+class WaitingClientsPhase(Phase):
+    """Wait for every cohort member's hello resource."""
+
+    name = "waiting_clients"
+
+    def __init__(self, next_phase: str = "validating"):
+        self.next_phase = next_phase
+
+    def poll(self, server):
+        r = server.run
+        r.phase_ticks += 1
+        hellos = server._poll_cohort(
+            lambda cid: f"runs/{r.run_id}/hello/{cid}", "hello")
+        if hellos is None:
+            return None
+        return self.next_phase
+
+    def wait_paths(self, server):
+        r = server.run
+        return [f"runs/{r.run_id}/hello/{cid}" for cid in r.cohort]
+
+
+class ValidatingPhase(Phase):
+    """Data Validator: check every client's data sheet vs the schema."""
+
+    name = "validating"
+
+    def __init__(self, next_phase: str = "distribute"):
+        self.next_phase = next_phase
+
+    def poll(self, server):
+        r = server.run
+        r.phase_ticks += 1
+        schema_d = r.job.data_schema
+        if schema_d is None:
+            return self.next_phase
+        schema = DataSchema.from_dict(schema_d)
+        stats = server._poll_cohort(
+            lambda cid: f"runs/{r.run_id}/validation/{cid}",
+            "validation_stats")
+        if stats is None:
+            return None               # still waiting (pull model)
+        results = [validate_stats(cid, schema, stats[cid])
+                   for cid in r.cohort]
+        bad = [res for res in results if not res.ok]
+        for res in results:
+            server.metadata.record_provenance(
+                actor="data_validator", operation="validate_data",
+                subject=res.client_id,
+                outcome="ok" if res.ok else "violation",
+                details={"violations": res.violations})
+        if bad:
+            # paper: identify the client, pause the process, report
+            r.pause_reason = (
+                f"data validation failed for "
+                f"{[b.client_id for b in bad]}: "
+                f"{[v for b in bad for v in b.violations]}")
+            return "paused"
+        return self.next_phase
+
+    def wait_paths(self, server):
+        r = server.run
+        if r.job.data_schema is None:
+            return None               # nothing to validate: immediate
+        return [f"runs/{r.run_id}/validation/{cid}" for cid in r.cohort]
+
+
+# ---------------------------------------------------------------------------
+# synchronous round program (behavior-preserving re-expression)
+# ---------------------------------------------------------------------------
+class DistributePhase(Phase):
+    """Publish the round's global model on the broadcast channel."""
+
+    name = "distribute"
+
+    def poll(self, server):
+        r = server.run
+        if r.job.gc_round_resources:
+            self._gc_rounds_before(server, r.hp_index, r.round)
+        r.round_cohort = list(r.cohort)
+        params = server.store.get(r.global_digest)
+        server.comm.publish(
+            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
+            {"digest": r.global_digest,
+             "params": jax.tree.map(np.asarray, params),
+             "round": r.round, "lr": server._job_lr(r.job),
+             # masked rounds: clients mask against *this round's* cohort
+             # (it shrinks across rounds) and pre-scale their update by
+             # n_examples / weight_denom so weighted FedAvg telescopes
+             "cohort": r.round_cohort,
+             "weight_denom": r.job.local_steps * r.job.batch_size})
+        return "collect"
+
+    @staticmethod
+    def _gc_rounds_before(server, hp: int, rnd: int):
+        """Delete spent board resources of rounds strictly before
+        ``(hp, rnd)`` (job.gc_round_resources): their evals were consumed,
+        their globals redistributed — only the current round's resources
+        are live. Keeps board memory bounded under many concurrent jobs."""
+        r = server.run
+        for path in server.board.list(f"runs/{r.run_id}/round/*"):
+            parts = path.split("/")
+            try:
+                key = (int(parts[3]), int(parts[4]))
+            except (IndexError, ValueError):
+                continue
+            if key < (hp, rnd):
+                server.board.delete(path)
+
+
+def publish_dropout(server, base: str, dropped_round: List[str]):
+    """Announce the dropout set; survivors answer with corrections posted
+    under the matching repair epoch (epochs advance when the dropout set
+    grows mid-repair, invalidating stale corrections)."""
+    r = server.run
+    r.repair_epoch += 1
+    server.comm.publish(f"{base}/dropout", {
+        "epoch": r.repair_epoch, "dropped": sorted(dropped_round),
+        "survivors": sorted(r.cohort)})
+    server.metadata.record_provenance(
+        actor="run_manager", operation="publish_dropout",
+        subject=f"{r.run_id}/r{r.round}", outcome="repair_requested",
+        details={"epoch": r.repair_epoch,
+                 "dropped": sorted(dropped_round)})
+
+
+class CollectPhase(Phase):
+    """Poll the cohort's round updates; aggregate when complete, or open a
+    mask-repair round when a masked cohort lost members mid-collect."""
+
+    name = "collect"
+
+    def poll(self, server):
+        r = server.run
+        r.phase_ticks += 1
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        msgs = server._poll_cohort(lambda cid: f"{base}/update/{cid}",
+                                   "round_update")
+        if msgs is None:
+            return None
+        # masked rounds post one packed fp32 buffer, not a pytree; key by
+        # the job's data plane so a mismatched client fails loudly here at
+        # the collect boundary
+        updates = {c: (m["packed"] if r.job.secure_aggregation
+                       else m["params"]) for c, m in msgs.items()}
+        sizes = {c: m["n_examples"] for c, m in msgs.items()}
+        losses = {c: m["train_loss"] for c, m in msgs.items()}
+        dropped_round = [c for c in r.round_cohort if c not in r.cohort]
+        if r.job.secure_aggregation and dropped_round:
+            # survivors' buffers still carry masks toward the dropped
+            # peers; stash the collect and run a mask-repair round
+            r.pending_round = {"updates": updates, "sizes": sizes,
+                               "losses": losses}
+            publish_dropout(server, base, dropped_round)
+            return "repair"
+        server._aggregate_and_advance(updates, sizes, losses)
+        return None                   # _aggregate_and_advance transitioned
+
+    def wait_paths(self, server):
+        r = server.run
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        return [f"{base}/update/{cid}" for cid in r.cohort]
+
+
+class RepairPhase(Phase):
+    """Mask-repair round (DESIGN.md §Dropout-tolerant rounds): every
+    survivor re-derives its pairwise masks against the dropped peers and
+    posts a packed correction; once all corrections for the current epoch
+    arrived the aggregator folds them into the reduction so the surviving
+    sum telescopes exactly."""
+
+    name = "repair"
+
+    def poll(self, server):
+        r = server.run
+        r.phase_ticks += 1
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        n_before = len(r.cohort)
+        msgs = server._poll_cohort(
+            lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
+            "mask_repair")
+        if r.phase == "paused":
+            return None
+        if len(r.cohort) != n_before:
+            # the dropout set grew mid-repair: corrections already posted
+            # (even a complete set) target the old dropout set — bump the
+            # epoch and ask the remaining survivors again
+            publish_dropout(
+                server, base,
+                [c for c in r.round_cohort if c not in r.cohort])
+            r.phase_ticks = 0
+            return None
+        if msgs is None:
+            return None
+        pending = r.pending_round
+        r.pending_round = None
+        server._aggregate_and_advance(
+            {c: pending["updates"][c] for c in r.cohort},
+            {c: pending["sizes"][c] for c in r.cohort},
+            {c: pending["losses"][c] for c in r.cohort},
+            corrections={c: m["correction"] for c, m in msgs.items()})
+        return None                   # _aggregate_and_advance transitioned
+
+    def wait_paths(self, server):
+        r = server.run
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        return [f"{base}/repair/{r.repair_epoch}/{cid}" for cid in r.cohort]
+
+
+class EvaluatePhase(Phase):
+    """Evaluation Coordinator: collect client-side evals of the round's
+    global (evaluation happens on clients — private test data), attach
+    the mean to the latest history entry, then ``advance()`` — for the
+    sync protocol, to the next round, the next hyperparameter trial, or
+    deploy. Protocol variants override ``advance``/``subject`` only; the
+    eval-collection mechanics stay single-sourced here."""
+
+    name = "evaluate"
+
+    def poll(self, server):
+        r = server.run
+        r.phase_ticks += 1
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        evals = server._poll_cohort(lambda cid: f"{base}/eval/{cid}",
+                                    "round_eval")
+        if evals is None:
+            return None
+        mean_eval = float(np.mean([e["eval_loss"] for e in evals.values()]))
+        r.history[-1]["mean_eval_loss"] = mean_eval
+        server.metadata.record_provenance(
+            actor="evaluation_coordinator", operation="round_eval",
+            subject=self.subject(r), outcome="ok",
+            details={"mean_eval_loss": mean_eval})
+        return self.advance(server)
+
+    def subject(self, r) -> str:
+        return f"{r.run_id}/r{r.round}"
+
+    def advance(self, server) -> str:
+        r = server.run
+        r.round += 1
+        if r.round >= r.job.rounds:
+            hp = r.job.hyperparameter_search
+            if hp and r.hp_index + 1 < len(hp["values"]):
+                # FL Run Manager repeats the process with new
+                # hyperparameters — every trial restarts from the *init*
+                # model (not the first trial's round-0 aggregate) and with
+                # fresh outer-optimizer state, so trials are comparable
+                r.hp_index += 1
+                r.round = 0
+                params = server.store.get(r.init_digest)
+                r.global_digest = server.store.put(
+                    params, "hp_restart", {"hp_index": r.hp_index})
+                r.outer = None
+                r.outer_state = None
+                return "distribute"
+            return "deploying"
+        return "distribute"
+
+    def wait_paths(self, server):
+        r = server.run
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        return [f"{base}/eval/{cid}" for cid in r.cohort]
+
+
+class DeployingPhase(Phase):
+    """Model Deployer: publish the release; clients pull and decide."""
+
+    name = "deploying"
+
+    def poll(self, server):
+        r = server.run
+        best = min(r.history, key=lambda h: h.get("mean_eval_loss",
+                                                  float("inf")))
+        server.comm.publish(f"runs/{r.run_id}/release", {
+            "digest": best["digest"], "round": best["round"],
+            "mean_eval_loss": best.get("mean_eval_loss")})
+        params = server.store.get(best["digest"])
+        server.comm.publish(f"runs/{r.run_id}/release/params", {
+            "digest": best["digest"],
+            "params": jax.tree.map(np.asarray, params)})
+        server.metadata.record_run_end(r.run_id, "completed",
+                                       best["digest"])
+        return "done"
+
+
+class SyncProtocol(Protocol):
+    """The paper's synchronous flow as a composed phase program."""
+
+    name = "sync"
+
+    def build_phases(self):
+        return (WaitingClientsPhase(next_phase="validating"),
+                ValidatingPhase(next_phase="distribute"),
+                DistributePhase(), CollectPhase(), RepairPhase(),
+                EvaluatePhase(), DeployingPhase(), PausedPhase(),
+                DonePhase())
+
+    def resume(self, server) -> str:
+        """If the current round's aggregate was already committed (the
+        pause hit during evaluate), resume straight into evaluate —
+        re-running the round would double-apply it and duplicate its
+        history entry. Otherwise re-run the round: bump the attempt so
+        clients reset their done-markers, and clear the aborted attempt's
+        resources NOW — before any client can fetch the stale global
+        (masked updates against the old cohort must never be collected)."""
+        r = server.run
+        r.pending_round = None        # discard any half-collected round
+        aggregated = (bool(r.history)
+                      and r.history[-1]["round"] == r.round
+                      and r.history[-1]["hp_index"] == r.hp_index
+                      and "mean_eval_loss" not in r.history[-1])
+        if aggregated:
+            return "evaluate"
+        r.round_attempt += 1
+        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        for path in server.board.list(f"{base}/*"):
+            server.board.delete(path)
+        return "validating"
+
+
+# ---------------------------------------------------------------------------
+# asynchronous buffered aggregation (FedBuff-style)
+# ---------------------------------------------------------------------------
+STALENESS_ALPHA = 0.5
+
+
+def staleness_weight(tau) -> float:
+    """FedBuff polynomial staleness discount: ``(1 + τ)^-α`` with α=0.5.
+
+    τ is the number of commits the global advanced since the client
+    fetched its base model. Strictly positive for every τ ≥ 0 — a stale
+    update is discounted, never discarded — and equal to 1 at τ=0.
+    """
+    return float((1.0 + float(tau)) ** -STALENESS_ALPHA)
+
+
+def fold_weights(taus: Sequence[float]) -> List[float]:
+    """Commit-normalized staleness weights for one buffered commit: each
+    update's ``staleness_weight`` divided by the buffer's total, so the
+    folded delta is a convex combination of the buffered deltas (weights
+    strictly positive, summing to 1)."""
+    raw = [staleness_weight(t) for t in taus]
+    total = sum(raw)
+    return [w / total for w in raw]
+
+
+class AsyncServePhase(Phase):
+    """Buffered asynchronous aggregation (DESIGN.md §Protocol programs).
+
+    The server publishes commit ``c``'s global at the standard round path
+    ``round/<hp>/<c>/global`` and keeps serving: every poll it scans the
+    cohort's ``async/update/<cid>`` resources (clients overwrite in place;
+    the board's monotonic overwrite version tells new from seen without
+    decryption), folds each fresh packed delta into the buffer weighted by
+    ``staleness_weight(commit - base_commit)``, and commits a new global
+    once ``job.async_buffer_size`` folds accumulated: normalized fold,
+    outer-optimizer step, history entry, next global published. After
+    ``job.rounds`` commits the run moves to the final evaluate phase.
+    Slow silos never stall the commit cadence — their late deltas land in
+    a later buffer, discounted by how far the global moved.
+    """
+
+    name = "async_serve"
+
+    def enter(self, server):
+        r = server.run
+        st = r.proto
+        st.setdefault("seen", {})     # cid -> last folded overwrite version
+        st.setdefault("buffer", None)  # weighted delta sum (T,)
+        st.setdefault("weight", 0.0)  # un-normalized staleness-weight sum
+        st.setdefault("folds", 0)
+        st.setdefault("fold_losses", [])
+        st.setdefault("fold_sizes", {})
+        st.setdefault("fold_taus", [])
+        self._publish_commit(server)
+
+    def _publish_commit(self, server):
+        r = server.run
+        params = server.store.get(r.global_digest)
+        server.comm.publish(
+            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
+            {"digest": r.global_digest,
+             "params": jax.tree.map(np.asarray, params),
+             "round": r.round, "lr": server._job_lr(r.job),
+             "cohort": list(r.cohort),
+             "weight_denom": r.job.local_steps * r.job.batch_size})
+
+    def poll(self, server):
+        r = server.run
+        st = r.proto
+        for cid in r.cohort:
+            path = f"runs/{r.run_id}/async/update/{cid}"
+            meta = server.board.stat(path)
+            if meta is None or meta["version"] <= st["seen"].get(cid, 0):
+                continue
+            msg = server.comm.collect(path, cid)
+            st["seen"][cid] = meta["version"]
+            self._fold(server, cid, msg)
+            if st["folds"] >= r.job.async_buffer_size:
+                done = self._commit(server)
+                if done:
+                    return "evaluate"
+        return None
+
+    def _fold(self, server, cid: str, msg: dict):
+        r = server.run
+        st = r.proto
+        tau = max(0, r.round - int(msg["base_commit"]))
+        w = staleness_weight(tau)
+        delta = np.asarray(msg["delta"], np.float32)
+        st["buffer"] = (w * delta if st["buffer"] is None
+                        else st["buffer"] + w * delta)
+        st["weight"] += w
+        st["folds"] += 1
+        st["fold_losses"].append(float(msg["train_loss"]))
+        st["fold_sizes"][cid] = (st["fold_sizes"].get(cid, 0)
+                                 + int(msg["n_examples"]))
+        st["fold_taus"].append(tau)
+
+    def _commit(self, server) -> bool:
+        """Normalize the buffer, step the outer optimizer, publish the
+        next global. Returns True when the commit budget is exhausted."""
+        r = server.run
+        st = r.proto
+        job = r.job
+        old_params = server.store.get(r.global_digest)
+        layout = PackedLayout.for_tree(old_params)
+        # convex combination of buffered deltas: weights are the positive
+        # staleness discounts normalized by their sum (fold_weights)
+        mean_delta = unpack_pytree(st["buffer"] / np.float32(st["weight"]),
+                                   layout)
+        new_global = jax.tree.map(
+            lambda p, d: np.asarray(p, np.float32)
+            + np.asarray(d, np.float32).reshape(np.shape(p)),
+            old_params, mean_delta)
+        from repro.optim import OUTER_REGISTRY
+        if r.outer is None:
+            r.outer = OUTER_REGISTRY[job.outer_optimizer]()
+            r.outer_state = r.outer.init(old_params)
+        new_params, r.outer_state = r.outer.step(
+            old_params, new_global, r.outer_state)
+        commit = r.round
+        digest = server.store.put(new_params, "async_commit", {
+            "run_id": r.run_id, "commit": commit, "hp_index": r.hp_index,
+            "folds": st["folds"], "staleness": list(st["fold_taus"])})
+        metrics = {"mean_train_loss": float(np.mean(st["fold_losses"])),
+                   "folds": st["folds"],
+                   "mean_staleness": float(np.mean(st["fold_taus"]))}
+        from repro.core.contribution import data_size_contribution
+        server.metadata.record_round(
+            r.run_id, commit, metrics, digest,
+            {"data_size": data_size_contribution(st["fold_sizes"])})
+        server.metadata.record_provenance(
+            actor="run_manager", operation="async_commit",
+            subject=f"{r.run_id}/c{commit}", outcome="committed",
+            details={"folds": st["folds"],
+                     "staleness": list(st["fold_taus"]),
+                     "weights": fold_weights(st["fold_taus"])})
+        r.history.append({"round": commit, "hp_index": r.hp_index,
+                          **metrics, "digest": digest})
+        r.global_digest = digest
+        st["buffer"] = None
+        st["weight"] = 0.0
+        st["folds"] = 0
+        st["fold_losses"] = []
+        st["fold_sizes"] = {}
+        st["fold_taus"] = []
+        r.round = commit + 1
+        if job.gc_round_resources:
+            # prior commits' globals are spent the moment a newer one is
+            # published (clients always fetch the status round's global)
+            for path in server.board.list(
+                    f"runs/{r.run_id}/round/{r.hp_index}/*/global"):
+                try:
+                    if int(path.split("/")[4]) < r.round:
+                        server.board.delete(path)
+                except (IndexError, ValueError):
+                    continue
+        self._publish_commit(server)
+        return r.round >= job.rounds
+
+    def wait_paths(self, server):
+        r = server.run
+        return [f"runs/{r.run_id}/async/update/{cid}" for cid in r.cohort]
+
+    def wake(self, server):
+        # the watched resources are overwritten in place, so "missing"
+        # filtering is wrong here: wake whenever any of them changes
+        # (the board's mutation counter bumps on every overwrite)
+        return WakeCondition(paths=tuple(self.wait_paths(server)))
+
+
+class AsyncEvaluatePhase(EvaluatePhase):
+    """Final evaluation of the last committed global: clients see the
+    standard ``evaluate`` status (round = commit count) and post their
+    eval of ``round/<hp>/<commits>/global`` — the model published by the
+    last commit. The mean lands on the last history entry, so deploying
+    releases the final committed model. Only the advance decision and the
+    provenance subject differ from the sync evaluate."""
+
+    def subject(self, r) -> str:
+        return f"{r.run_id}/final"
+
+    def advance(self, server) -> str:
+        return "deploying"
+
+
+class AsyncBuffProtocol(Protocol):
+    """waiting_clients → validating → async_serve → evaluate → deploying."""
+
+    name = "async_buff"
+
+    def build_phases(self):
+        return (WaitingClientsPhase(next_phase="validating"),
+                ValidatingPhase(next_phase="async_serve"),
+                AsyncServePhase(), AsyncEvaluatePhase(),
+                DeployingPhase(), PausedPhase(), DonePhase())
+
+    def resume(self, server) -> str:
+        """Phase-aware re-entry. Buffered updates are staleness-tagged,
+        so nothing collected before a mid-serve pause is stale in the
+        sync sense — resume serving where the run left off (re-publishing
+        the current commit's global, via enter). But a pause after the
+        commit budget was exhausted must NOT re-enter serving (that would
+        fold one commit past the budget); it resumes into the final
+        evaluate, or straight into deploying when the eval mean already
+        landed. A pause before serving ever started re-validates, like
+        the sync protocol."""
+        r = server.run
+        if not r.proto:
+            return "validating"       # paused before async_serve.enter ran
+        if r.round >= r.job.rounds:   # commit budget already exhausted
+            evaluated = (bool(r.history)
+                         and "mean_eval_loss" in r.history[-1])
+            return "deploying" if evaluated else "evaluate"
+        return "async_serve"
+
+
+PROTOCOLS = {
+    "sync": SyncProtocol,
+    "async_buff": AsyncBuffProtocol,
+}
+
+
+def make_protocol(name: str) -> Protocol:
+    try:
+        return PROTOCOLS[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown protocol {name!r}; known: {sorted(PROTOCOLS)}"
+        ) from None
+
+
+# client-side helper shared with core.client: pack a trained-params /
+# base-params pair into the posted delta buffer
+def pack_delta(trained, base):
+    buf_t, _ = pack_pytree(trained)
+    buf_b, _ = pack_pytree(base)
+    return np.asarray(buf_t, np.float32) - np.asarray(buf_b, np.float32)

@@ -18,11 +18,15 @@ scheduler):
   once the blocked job has waited ``patience`` passes the queue reserves
   capacity for it (no further backfill), so nothing starves.
 * **Event-driven loop** — each admitted job is one ``FLServer`` state
-  machine. After every tick the server reports a ``WakeCondition`` (board
-  paths it waits for, or "poll me"); the loop compares the board's
-  mutation counter against the snapshot and *skips* servers with nothing
-  to do instead of blindly round-robin ticking them. ``stats`` counts the
-  skipped idle ticks — ``bench_multi_job`` turns that into the proof.
+  machine. After every tick the server reports a ``WakeCondition``
+  *derived from its active protocol phase's declared wait-set*
+  (``repro.core.protocol``: board paths it waits for, or "poll me"); the
+  loop compares the board's mutation counter against the snapshot and
+  *skips* servers with nothing to do instead of blindly round-robin
+  ticking them. Deletions leave per-path tombstone seqs on the board, so
+  a wake snapshot taken before a round GC can still observe the change.
+  ``stats`` counts the skipped idle ticks — ``bench_multi_job`` turns
+  that into the proof.
 * **Provenance** — every submit/admit/preempt/suspend/complete decision is
   a record on the shared hash chain, queryable via ``metadata.query``.
 
@@ -43,7 +47,8 @@ from repro.core.communicator import (ClientCommunicator, MessageBoard,
                                      ServerCommunicator)
 from repro.core.jobs import FLJob
 from repro.core.metadata import MetadataStore
-from repro.core.server import FLServer, WakeCondition
+from repro.core.protocol import WakeCondition
+from repro.core.server import FLServer
 
 
 @dataclass

@@ -1,13 +1,20 @@
 """FL Server (paper §V): FL Manager (Run Manager + coordinators + Model
 Aggregator), Model Deployer, Database/Model store, Reporting hooks.
 
-The Run Manager is a cooperative state machine: ``tick()`` advances the
-server one poll cycle. The server only ever *publishes* resources and
-*reads* resources clients posted — it never invokes client-side operations
-(requirement 6). The in-process driver alternates server and client ticks;
-a real deployment would run the same state machine behind a REST service.
+The Run Manager is a thin executor over a *protocol program*
+(``repro.core.protocol``): the run's phase sequence — which resources to
+publish, which per-client posts to block on, when to aggregate — is
+composed from ``Phase`` objects by the job's ``Protocol`` (sync rounds or
+FedBuff-style async buffered aggregation). ``tick()`` polls the active
+phase one cycle; ``wake_condition()`` is *derived* from the phase's
+declared wait-set, so the scheduler's event loop and the phase logic can
+never drift apart. The server only ever *publishes* resources and *reads*
+resources clients posted — it never invokes client-side operations
+(requirement 6). The in-process driver alternates server and client
+ticks; a real deployment would run the same state machine behind a REST
+service.
 
-Run phases:
+Sync protocol phases:
   waiting_clients -> validating -> round k (distribute -> collect ->
   [repair] -> aggregate -> evaluate) -> [hyperparameter repeat] ->
   deploying -> done
@@ -42,7 +49,8 @@ from repro.core.contribution import (data_size_contribution,
 from repro.core.governance import GovernanceCockpit
 from repro.core.jobs import FLJob, JobCreator
 from repro.core.metadata import MetadataStore
-from repro.core.validation import DataSchema, validate_stats
+from repro.core.protocol import (Protocol, WakeCondition,  # noqa: F401
+                                 make_protocol)
 from repro.models import build_model
 
 
@@ -92,20 +100,8 @@ class RunState:
     # --- outer (FedOpt) optimizer — explicit state, reset on hp restart --
     outer: Any = None
     outer_state: Any = None
-
-
-@dataclass(frozen=True)
-class WakeCondition:
-    """What a run is waiting for (DESIGN.md §Federation scheduler).
-
-    ``paths``: board resources whose appearance/overwrite should wake the
-    run — the scheduler compares their mutation counters against a
-    snapshot instead of blindly ticking. ``poll=True``: the run has work
-    to do (or deadlines to count) on every scheduler pass. A terminal run
-    returns ``None`` — never wake again.
-    """
-    paths: tuple = ()
-    poll: bool = False
+    # --- protocol-private state (e.g. the async fold buffer) -------------
+    proto: Dict[str, Any] = field(default_factory=dict)
 
 
 class FLServer:
@@ -129,6 +125,7 @@ class FLServer:
         self.store = ModelStore(self.metadata)
         self.cockpit: Optional[GovernanceCockpit] = None
         self.run: Optional[RunState] = None
+        self.protocol: Optional[Protocol] = None
         self.pair_secret = master_key + b"/pairwise"
         self.seed = seed
         self._rng = jax.random.PRNGKey(seed)
@@ -158,7 +155,9 @@ class FLServer:
         unknown = [c for c in cohort if c not in active]
         if unknown:
             raise RuntimeError(f"cohort members not active: {unknown}")
-        self.run = RunState(run_id=run_id, job=job, cohort=list(cohort))
+        self.protocol = make_protocol(job.protocol)
+        self.run = RunState(run_id=run_id, job=job, cohort=list(cohort),
+                            phase=self.protocol.initial)
         if not self.run.cohort:
             raise RuntimeError("no active clients in the registry")
         if rotate_tokens:
@@ -182,6 +181,7 @@ class FLServer:
             self.comm.publish(f"runs/{run_id}/session/{cid}",
                               {"token_issued": True, "run_id": run_id},
                               client_id=cid)
+        self.protocol.phase(self.run.phase).enter(self)
         self._publish_status()
         return run_id
 
@@ -208,58 +208,48 @@ class FLServer:
         })
 
     # ------------------------------------------------------------------
+    # Protocol executor
+    # ------------------------------------------------------------------
     def tick(self) -> str:
-        """Advance the run state machine one poll cycle. Returns the phase."""
+        """Advance the run one poll cycle: poll the active phase, apply
+        its transition (helper-set transitions — e.g. a deadline pause —
+        take precedence over the poll return value), publish status."""
         r = self.run
         if r is None:
             return "idle"
         r.ticks += 1
         self._refresh_heartbeats()
         prev_phase = r.phase
-        handler = getattr(self, f"_tick_{r.phase}", None)
-        if handler:
-            handler()
-            if self.run.phase != prev_phase:
-                self.run.phase_ticks = 0
-            self._publish_status()
-        return self.run.phase
+        nxt = self.protocol.phase(r.phase).poll(self)
+        if r.phase == prev_phase and nxt is not None:
+            r.phase = nxt
+        if r.phase != prev_phase:
+            r.phase_ticks = 0
+            self.protocol.phase(r.phase).enter(self)
+        self._publish_status()
+        return r.phase
 
     def wake_condition(self) -> Optional[WakeCondition]:
-        """What would make the next ``tick()`` do useful work.
+        """What would make the next ``tick()`` do useful work — derived
+        from the active phase's declared wait-set (``Phase.wait_paths`` /
+        ``Phase.wake``), never from a parallel table.
 
-        Polling phases waiting on per-client posts return the missing
-        board paths so an event-driven scheduler only ticks this server
-        when one of them lands. Phases with immediate work (distribute,
-        deploying) and runs with a round deadline (phase_ticks must count
-        real poll cycles for the dropout machinery) ask to be polled every
-        pass. Terminal phases return ``None``: never wake.
+        Phases blocked on per-client posts yield the missing board paths
+        so an event-driven scheduler only ticks this server when one of
+        them lands; phases with immediate work yield ``poll=True``; runs
+        with a round deadline ask to be polled every pass (phase_ticks
+        must count real poll cycles for the dropout machinery); terminal
+        phases yield ``None``: never wake.
         """
         r = self.run
         if r is None:
             return WakeCondition(poll=True)          # ready to start a run
-        if r.phase in ("done", "paused"):
+        phase = self.protocol.phase(r.phase)
+        if phase.terminal:
             return None
         if r.job.round_deadline_ticks:
             return WakeCondition(poll=True)          # deadlines count polls
-        base = f"runs/{r.run_id}"
-        rd = f"{base}/round/{r.hp_index}/{r.round}"
-        # no "repair" entry: the repair phase is only reachable through a
-        # cohort shrink, which requires round_deadline_ticks — and those
-        # runs already short-circuited to poll=True above
-        per_client = {
-            "waiting_clients": lambda cid: f"{base}/hello/{cid}",
-            "validating": lambda cid: f"{base}/validation/{cid}",
-            "collect": lambda cid: f"{rd}/update/{cid}",
-            "evaluate": lambda cid: f"{rd}/eval/{cid}",
-        }.get(r.phase)
-        if per_client is None or (r.phase == "validating"
-                                  and r.job.data_schema is None):
-            return WakeCondition(poll=True)
-        missing = [cid for cid in r.cohort
-                   if self.board.stat(per_client(cid)) is None]
-        if not missing:
-            return WakeCondition(poll=True)          # everything arrived
-        return WakeCondition(paths=tuple(per_client(c) for c in missing))
+        return phase.wake(self)
 
     # --- liveness / deadline bookkeeping ------------------------------
     def _refresh_heartbeats(self):
@@ -344,156 +334,7 @@ class FLServer:
         return {cid: self.comm.collect(path_for(cid), cid)
                 for cid in r.cohort}
 
-    # --- phase handlers -----------------------------------------------
-    def _tick_waiting_clients(self):
-        r = self.run
-        r.phase_ticks += 1
-        hellos = self._poll_cohort(
-            lambda cid: f"runs/{r.run_id}/hello/{cid}", "hello")
-        if hellos is None:
-            return
-        r.phase = "validating"
-
-    def _tick_validating(self):
-        """Data Validator: check every client's data sheet vs the schema."""
-        r = self.run
-        r.phase_ticks += 1
-        schema_d = r.job.data_schema
-        if schema_d is None:
-            r.phase = "distribute"
-            return
-        schema = DataSchema.from_dict(schema_d)
-        stats = self._poll_cohort(
-            lambda cid: f"runs/{r.run_id}/validation/{cid}",
-            "validation_stats")
-        if stats is None:
-            return                       # still waiting (pull model)
-        results = [validate_stats(cid, schema, stats[cid])
-                   for cid in r.cohort]
-        bad = [res for res in results if not res.ok]
-        for res in results:
-            self.metadata.record_provenance(
-                actor="data_validator", operation="validate_data",
-                subject=res.client_id,
-                outcome="ok" if res.ok else "violation",
-                details={"violations": res.violations})
-        if bad:
-            # paper: identify the client, pause the process, report
-            r.phase = "paused"
-            r.pause_reason = (
-                f"data validation failed for "
-                f"{[b.client_id for b in bad]}: "
-                f"{[v for b in bad for v in b.violations]}")
-        else:
-            r.phase = "distribute"
-
-    def _gc_rounds_before(self, hp: int, rnd: int):
-        """Delete spent board resources of rounds strictly before
-        ``(hp, rnd)`` (job.gc_round_resources): their evals were consumed,
-        their globals redistributed — only the current round's resources
-        are live. Keeps board memory bounded under many concurrent jobs."""
-        r = self.run
-        for path in self.board.list(f"runs/{r.run_id}/round/*"):
-            parts = path.split("/")
-            try:
-                key = (int(parts[3]), int(parts[4]))
-            except (IndexError, ValueError):
-                continue
-            if key < (hp, rnd):
-                self.board.delete(path)
-
-    def _tick_distribute(self):
-        r = self.run
-        if r.job.gc_round_resources:
-            self._gc_rounds_before(r.hp_index, r.round)
-        r.round_cohort = list(r.cohort)
-        params = self.store.get(r.global_digest)
-        self.comm.publish(
-            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
-            {"digest": r.global_digest,
-             "params": jax.tree.map(np.asarray, params),
-             "round": r.round, "lr": self._job_lr(r.job),
-             # masked rounds: clients mask against *this round's* cohort
-             # (it shrinks across rounds) and pre-scale their update by
-             # n_examples / weight_denom so weighted FedAvg telescopes
-             "cohort": r.round_cohort,
-             "weight_denom": r.job.local_steps * r.job.batch_size})
-        r.phase = "collect"
-
-    def _tick_collect(self):
-        r = self.run
-        r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        msgs = self._poll_cohort(lambda cid: f"{base}/update/{cid}",
-                                 "round_update")
-        if msgs is None:
-            return
-        # masked rounds post one packed fp32 buffer, not a pytree; key by
-        # the job's protocol so a mismatched client fails loudly here at
-        # the collect boundary
-        updates = {c: (m["packed"] if r.job.secure_aggregation
-                       else m["params"]) for c, m in msgs.items()}
-        sizes = {c: m["n_examples"] for c, m in msgs.items()}
-        losses = {c: m["train_loss"] for c, m in msgs.items()}
-        dropped_round = [c for c in r.round_cohort if c not in r.cohort]
-        if r.job.secure_aggregation and dropped_round:
-            # survivors' buffers still carry masks toward the dropped
-            # peers; stash the collect and run a mask-repair round
-            r.pending_round = {"updates": updates, "sizes": sizes,
-                               "losses": losses}
-            self._publish_dropout(base, dropped_round)
-            r.phase = "repair"
-            return
-        self._aggregate_and_advance(updates, sizes, losses)
-
-    def _publish_dropout(self, base: str, dropped_round: List[str]):
-        """Announce the dropout set; survivors answer with corrections
-        posted under the matching repair epoch (epochs advance when the
-        dropout set grows mid-repair, invalidating stale corrections)."""
-        r = self.run
-        r.repair_epoch += 1
-        self.comm.publish(f"{base}/dropout", {
-            "epoch": r.repair_epoch, "dropped": sorted(dropped_round),
-            "survivors": sorted(r.cohort)})
-        self.metadata.record_provenance(
-            actor="run_manager", operation="publish_dropout",
-            subject=f"{r.run_id}/r{r.round}", outcome="repair_requested",
-            details={"epoch": r.repair_epoch,
-                     "dropped": sorted(dropped_round)})
-
-    def _tick_repair(self):
-        """Mask-repair round (DESIGN.md §Dropout-tolerant rounds): every
-        survivor re-derives its pairwise masks against the dropped peers
-        and posts a packed correction; once all corrections for the
-        current epoch arrived the aggregator folds them into the
-        reduction so the surviving sum telescopes exactly."""
-        r = self.run
-        r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        n_before = len(r.cohort)
-        msgs = self._poll_cohort(
-            lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
-            "mask_repair")
-        if r.phase == "paused":
-            return
-        if len(r.cohort) != n_before:
-            # the dropout set grew mid-repair: corrections already posted
-            # (even a complete set) target the old dropout set — bump the
-            # epoch and ask the remaining survivors again
-            self._publish_dropout(
-                base, [c for c in r.round_cohort if c not in r.cohort])
-            r.phase_ticks = 0
-            return
-        if msgs is None:
-            return
-        pending = r.pending_round
-        r.pending_round = None
-        self._aggregate_and_advance(
-            {c: pending["updates"][c] for c in r.cohort},
-            {c: pending["sizes"][c] for c in r.cohort},
-            {c: pending["losses"][c] for c in r.cohort},
-            corrections={c: m["correction"] for c, m in msgs.items()})
-
+    # --- Model Aggregator ---------------------------------------------
     def _aggregate_and_advance(self, updates, sizes, losses,
                                corrections=None):
         r = self.run
@@ -562,64 +403,6 @@ class FLServer:
                     self.board.delete(path)
         r.phase = "evaluate"
 
-    def _tick_evaluate(self):
-        """Evaluation Coordinator: collect client-side evals of the new
-        global model (evaluation happens on clients — private test data)."""
-        r = self.run
-        r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        evals = self._poll_cohort(lambda cid: f"{base}/eval/{cid}",
-                                  "round_eval")
-        if evals is None:
-            return
-        mean_eval = float(np.mean([e["eval_loss"] for e in evals.values()]))
-        r.history[-1]["mean_eval_loss"] = mean_eval
-        self.metadata.record_provenance(
-            actor="evaluation_coordinator", operation="round_eval",
-            subject=f"{r.run_id}/r{r.round}", outcome="ok",
-            details={"mean_eval_loss": mean_eval})
-        r.round += 1
-        if r.round >= r.job.rounds:
-            hp = r.job.hyperparameter_search
-            if hp and r.hp_index + 1 < len(hp["values"]):
-                # FL Run Manager repeats the process with new
-                # hyperparameters — every trial restarts from the *init*
-                # model (not the first trial's round-0 aggregate) and with
-                # fresh outer-optimizer state, so trials are comparable
-                r.hp_index += 1
-                r.round = 0
-                params = self.store.get(r.init_digest)
-                r.global_digest = self.store.put(
-                    params, "hp_restart", {"hp_index": r.hp_index})
-                r.outer = None
-                r.outer_state = None
-                r.phase = "distribute"
-            else:
-                r.phase = "deploying"
-        else:
-            r.phase = "distribute"
-
-    def _tick_deploying(self):
-        """Model Deployer: publish the release; clients pull and decide."""
-        r = self.run
-        best = min(r.history, key=lambda h: h.get("mean_eval_loss",
-                                                  float("inf")))
-        self.comm.publish(f"runs/{r.run_id}/release", {
-            "digest": best["digest"], "round": best["round"],
-            "mean_eval_loss": best.get("mean_eval_loss")})
-        params = self.store.get(best["digest"])
-        self.comm.publish(f"runs/{r.run_id}/release/params", {
-            "digest": best["digest"],
-            "params": jax.tree.map(np.asarray, params)})
-        self.metadata.record_run_end(r.run_id, "completed", best["digest"])
-        r.phase = "done"
-
-    def _tick_paused(self):
-        pass                                  # needs admin intervention
-
-    def _tick_done(self):
-        pass
-
     # ------------------------------------------------------------------
     # Admin operations (Governance & Management Website backend)
     # ------------------------------------------------------------------
@@ -641,7 +424,7 @@ class FLServer:
         """Externally pause a live run (scheduler preemption, operator
         intervention). The run lands in the same ``paused`` state the
         dropout/validation machinery uses, so ``admin_resume`` restores it
-        with the usual re-run-or-continue semantics — a preempted masked
+        with the usual protocol-specific semantics — a preempted masked
         round is re-collected against the surviving cohort, never resumed
         from stale updates."""
         r = self.run
@@ -655,31 +438,17 @@ class FLServer:
         self._publish_status()
 
     def admin_resume(self, admin: str):
+        """Resume a paused run. The re-entry point and its bookkeeping are
+        the protocol's call (``Protocol.resume``): the sync protocol
+        re-runs the interrupted round (attempt bump + board wipe) or
+        continues into evaluate when the aggregate was already committed;
+        the async protocol just resumes serving its buffer."""
         if self.run and self.run.phase == "paused":
             r = self.run
             r.pause_reason = None
             r.phase_ticks = 0
-            r.pending_round = None       # discard any half-collected round
-            # If the current round's aggregate was already committed (the
-            # pause hit during evaluate), resume straight into evaluate —
-            # re-running the round would double-apply it and duplicate its
-            # history entry. Otherwise re-run the round: bump the attempt
-            # so clients reset their done-markers, and clear the aborted
-            # attempt's resources NOW — before any client can fetch the
-            # stale global (masked updates against the old cohort must
-            # never be collected).
-            aggregated = (bool(r.history)
-                          and r.history[-1]["round"] == r.round
-                          and r.history[-1]["hp_index"] == r.hp_index
-                          and "mean_eval_loss" not in r.history[-1])
-            if aggregated:
-                r.phase = "evaluate"
-            else:
-                r.phase = "validating"
-                r.round_attempt += 1
-                base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-                for path in self.board.list(f"{base}/*"):
-                    self.board.delete(path)
+            r.phase = self.protocol.resume(self)
+            self.protocol.phase(r.phase).enter(self)
             self.metadata.record_provenance(
                 actor=admin, operation="resume_run",
                 subject=r.run_id, outcome="resumed",
@@ -694,6 +463,7 @@ class FLServer:
         return {
             "phase": r.phase if r else "idle",
             "round": r.round if r else None,
+            "protocol": self.protocol.name if self.protocol else None,
             "dropped_clients": list(r.dropped) if r else [],
             "board": dict(self.board.stats),
             "registered_clients": self.clients.active_clients(),

@@ -82,16 +82,22 @@ class Consortium:
         return self.client_ids.get(org_or_cid, org_or_cid)
 
     def run_to_completion(self, max_ticks: int = 10_000,
-                          drop_at: Optional[dict] = None) -> str:
+                          drop_at: Optional[dict] = None,
+                          target_loss: Optional[float] = None) -> str:
         """Drive the scheduler until this consortium's job is terminal.
 
         ``drop_at`` injects client dropout: ``{org_or_client_id: when}``
         where ``when`` is either an absolute pass index (int) or a
         ``(phase, round)`` tuple — the silo stops serving the run
         (vanishes, no farewell message) the first time the server reports
-        that phase at that round. E.g. ``{"solarx": ("collect", 1)}``
-        kills solarx right as round 1's collect opens, before it can post
-        its update.
+        that phase at that round (for async jobs, round = commit index).
+        E.g. ``{"solarx": ("collect", 1)}`` kills solarx right as round
+        1's collect opens, before it can post its update.
+
+        ``target_loss`` stops early — returns ``"target_reached"`` the
+        first pass a committed history entry's ``mean_train_loss`` is at
+        or below it. That is the time-to-target probe benchmarks use to
+        compare protocols (sync rounds vs async commits) on equal terms.
         """
         sched, run_id = self.scheduler, self.run_id
         entry = sched.entries[run_id]
@@ -117,6 +123,10 @@ class Consortium:
                         dead.add(cid)
                         sched.drop_client(run_id, cid)
             sched.step(on_phase=on_phase)
+            if target_loss is not None and any(
+                    h.get("mean_train_loss", float("inf")) <= target_loss
+                    for h in self.server.run.history):
+                return "target_reached"
             phase = self.server.run.phase
             if phase in ("done", "paused"):
                 return phase

@@ -1,0 +1,417 @@
+"""Protocol programs (DESIGN.md §Protocol programs).
+
+Covers the tentpole contract of the phase/protocol refactor:
+
+* sync twin-equivalence — the composed-phase pipeline preserves the
+  pre-refactor protocol semantics on secure, weighted and dropout-repair
+  runs (masked aggregates match plain twins <= 1e-4, the same invariant
+  the monolithic handlers were tested against), and the phase trace is
+  the documented program;
+* derived wake conditions — ``FLServer.wake_condition()`` comes from the
+  active phase's declared wait-set, and every declared path is one the
+  phase actually probes when it next polls (no parallel table to drift);
+* async buffered aggregation — staleness weights are strictly positive
+  and commit-normalized (hypothesis property), end-to-end async runs
+  commit/evaluate/deploy with provenance, and skewed fleets produce
+  genuinely stale (discounted, never discarded) folds;
+* board tombstones — deletions are observable through ``latest_seq`` so
+  round GC cannot strand a wake snapshot.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import Consortium
+from repro.core.protocol import (AsyncBuffProtocol, SyncProtocol,
+                                 fold_weights, make_protocol,
+                                 staleness_weight)
+from repro.data import make_silo_datasets
+
+ARCH = "fedforecast-100m"
+ORGS5 = ["a", "b", "c", "d", "e"]
+
+
+def _consortium(orgs, decisions, seed=0):
+    con = Consortium(orgs, seed=seed)
+    base = {"arch": ARCH, "rounds": 1, "local_steps": 1, "batch_size": 2,
+            "lr": 1e-3, "data_schema": None}
+    base.update(decisions)
+    contract = con.negotiate(base)
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(len(orgs), vocab=512, seq_len=32, seed=seed)
+    con.start(job, ds)
+    return con
+
+
+def _final_params(con):
+    return con.server.store.get(con.server.run.history[-1]["digest"])
+
+
+def _max_err(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# protocol composition
+# ---------------------------------------------------------------------------
+def test_protocol_registry_and_phase_composition():
+    sync = make_protocol("sync")
+    assert isinstance(sync, SyncProtocol)
+    assert set(sync.phases) == {
+        "waiting_clients", "validating", "distribute", "collect", "repair",
+        "evaluate", "deploying", "paused", "done"}
+    asyn = make_protocol("async_buff")
+    assert isinstance(asyn, AsyncBuffProtocol)
+    assert set(asyn.phases) == {
+        "waiting_clients", "validating", "async_serve", "evaluate",
+        "deploying", "paused", "done"}
+    for proto in (sync, asyn):
+        assert proto.initial == "waiting_clients"
+        assert proto.phase("done").terminal
+        assert proto.phase("paused").terminal
+    with pytest.raises(KeyError, match="unknown protocol"):
+        make_protocol("gossip")
+
+
+def test_sync_phase_trace_is_the_documented_program():
+    """The executor walks exactly the composed sync program: the phase
+    trace over a 2-round run is the canonical sequence (no repair — no
+    dropout), ending terminal."""
+    con = _consortium(["x", "y"], {"rounds": 2})
+    trace = [con.server.run.phase]
+    for _ in range(500):
+        con.scheduler.step()
+        phase = con.server.run.phase
+        if phase != trace[-1]:
+            trace.append(phase)
+        if phase == "done":
+            break
+    assert trace == ["waiting_clients", "validating", "distribute",
+                     "collect", "evaluate", "distribute", "collect",
+                     "evaluate", "deploying", "done"]
+
+
+# ---------------------------------------------------------------------------
+# twin equivalence: composed phases preserve the protocol semantics
+# ---------------------------------------------------------------------------
+def test_sync_secure_twin_matches_plain():
+    """Masked composed-phase run == plain twin run <= 1e-4 (identical
+    seeds/data; the secure data plane only adds telescoping masks)."""
+    con_s = _consortium(["p", "q", "r"], {"secure_aggregation": True})
+    con_p = _consortium(["p", "q", "r"], {"secure_aggregation": False})
+    assert con_s.run_to_completion() == "done"
+    assert con_p.run_to_completion() == "done"
+    assert _max_err(_final_params(con_s), _final_params(con_p)) <= 1e-4
+
+
+def test_sync_weighted_twin_matches_plain():
+    """Weighted masked FedAvg (small silo pre-scales < 1) through the
+    composed phases still matches the plain weighted twin."""
+    def build(secure):
+        con = Consortium(["p", "q", "r"], seed=0)
+        contract = con.negotiate({
+            "arch": ARCH, "rounds": 1, "local_steps": 2, "batch_size": 2,
+            "lr": 1e-3, "data_schema": None, "secure_aggregation": secure})
+        job = con.server.job_creator.from_contract(contract)
+        ds = make_silo_datasets(3, vocab=512, seq_len=32, seed=0)
+        ds[0].n_examples = 1            # tiny silo: fractional weight
+        con.start(job, ds)
+        assert con.run_to_completion() == "done"
+        return con
+    assert _max_err(_final_params(build(True)),
+                    _final_params(build(False))) <= 1e-4
+
+
+def test_sync_dropout_repair_twin_matches_plain():
+    """The dropout-repair path through the composed phases (collect →
+    repair → aggregate) matches the plain twin with the same dropout —
+    the acceptance scenario."""
+    def build(secure):
+        con = _consortium(ORGS5, {"secure_aggregation": secure,
+                                  "round_deadline_ticks": 3})
+        phase = con.run_to_completion(drop_at={"c": ("collect", 0)})
+        assert phase == "done"
+        return con
+    con_s, con_p = build(True), build(False)
+    assert con_s.server.run.dropped == [con_s.client_ids["c"]]
+    repairs = [r for r in con_s.server.metadata.query(kind="provenance")
+               if r["operation"] == "publish_dropout"]
+    assert len(repairs) == 1            # the repair phase ran
+    assert _max_err(_final_params(con_s), _final_params(con_p)) <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# derived wake conditions
+# ---------------------------------------------------------------------------
+def test_wake_condition_derived_from_phase_declarations():
+    """Drive a full run tick-aligned with the scheduler; whenever the
+    server reports a path-based wake condition, the very next tick of the
+    active phase must actually stat-probe every declared path — i.e. the
+    derived wait-set is the phase's real blocking read-set, not a
+    parallel table that can drift."""
+    con = Consortium(["m", "n"], seed=0)
+    contract = con.negotiate({
+        "arch": ARCH, "rounds": 1, "local_steps": 1, "batch_size": 2,
+        "lr": 1e-3, "data_schema": None})
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(2, vocab=512, seq_len=32, seed=0)
+    # slow silos: phases genuinely block with missing paths for a while
+    for org, d in zip(con.organizations, ds):
+        con.scheduler.register_agent(con.client_ids[org], d,
+                                     capacity=1, tick_every=3)
+    con.start(job, ds)
+    server = con.server
+    board = server.board
+    probed = []
+    orig_stat = board.stat
+
+    def spying_stat(path):
+        probed.append(path)
+        return orig_stat(path)
+
+    board.stat = spying_stat
+    checked_phases = set()
+    for _ in range(300):
+        wake = server.wake_condition()
+        if wake is None:
+            break
+        if wake.paths:
+            phase_before = server.run.phase
+            probed.clear()
+            server.tick()
+            missing = set(wake.paths) - set(probed)
+            assert not missing, (
+                f"phase {phase_before!r} declared waits it never probed: "
+                f"{missing}")
+            checked_phases.add(phase_before)
+        con.scheduler.step()
+        if server.run.phase == "done":
+            break
+    board.stat = orig_stat
+    # the run must have exercised path-based waits in the polling phases
+    assert "waiting_clients" in checked_phases
+    assert "collect" in checked_phases or "evaluate" in checked_phases
+
+
+def test_wake_condition_async_watches_overwrites():
+    """The async serve phase waits on per-client update resources that are
+    overwritten in place — its wake condition must keep naming them even
+    once they exist (an overwrite, not an appearance, is the signal)."""
+    con = _consortium(["u", "v"], {
+        "secure_aggregation": False, "protocol": "async_buff",
+        "rounds": 2, "async_buffer_size": 2})
+    server = con.server
+    for _ in range(200):
+        con.scheduler.step()
+        if server.run.phase == "async_serve":
+            break
+    assert server.run.phase == "async_serve"
+    wake = server.wake_condition()
+    assert not wake.poll
+    assert set(wake.paths) == {
+        f"runs/{con.run_id}/async/update/{cid}"
+        for cid in server.run.cohort}
+    assert con.run_to_completion() == "done"
+
+
+# ---------------------------------------------------------------------------
+# async staleness weighting
+# ---------------------------------------------------------------------------
+def test_staleness_weights_positive_and_commit_normalized():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.integers(0, 1000), min_size=1, max_size=32))
+    def check(taus):
+        raws = [staleness_weight(t) for t in taus]
+        assert all(w > 0 for w in raws)          # discounted, never dropped
+        assert all(w <= 1.0 for w in raws)       # fresh (τ=0) is the max
+        norm = fold_weights(taus)
+        assert all(w > 0 for w in norm)
+        assert abs(sum(norm) - 1.0) <= 1e-9      # convex fold per commit
+        # fresher updates never weigh less than staler ones
+        by_tau = sorted(zip(taus, norm))
+        assert all(a[1] >= b[1] - 1e-12
+                   for a, b in zip(by_tau, by_tau[1:]))
+
+    check()
+
+
+def test_staleness_weight_identity_at_zero():
+    assert staleness_weight(0) == 1.0
+    assert staleness_weight(3) == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# async end to end
+# ---------------------------------------------------------------------------
+def test_async_run_commits_evaluates_deploys():
+    con = _consortium(["a", "b", "c"], {
+        "secure_aggregation": False, "protocol": "async_buff",
+        "rounds": 3, "async_buffer_size": 3})
+    assert con.run_to_completion() == "done"
+    r = con.server.run
+    assert r.round == 3                          # 3 commits
+    assert [h["round"] for h in r.history] == [0, 1, 2]
+    assert "mean_eval_loss" in r.history[-1]     # final eval attached
+    commits = con.server.metadata.query(kind="provenance",
+                                        operation="async_commit")
+    assert len(commits) == 3
+    for c in commits:
+        assert c["details"]["folds"] == 3
+        ws = c["details"]["weights"]
+        assert all(w > 0 for w in ws) and abs(sum(ws) - 1.0) < 1e-9
+    # the release is the last committed model, pulled + deployed
+    rel = con.nodes[0].comm.fetch(f"runs/{con.run_id}/release",
+                                  broadcast=True)
+    assert rel["digest"] == r.history[-1]["digest"]
+    for node in con.nodes:
+        assert node.deployed_params is not None
+    assert con.server.metadata.verify_chain()
+
+
+def test_async_skewed_fleet_produces_stale_discounted_folds():
+    """With a 4x-skewed fleet the slow silo's updates arrive after the
+    global moved: some fold must record staleness > 0 — and the run still
+    completes with every client having contributed."""
+    con = Consortium(["fast1", "fast2", "slow"], seed=0)
+    contract = con.negotiate({
+        "arch": ARCH, "rounds": 8, "local_steps": 1, "batch_size": 2,
+        "lr": 1e-3, "data_schema": None, "secure_aggregation": False,
+        "protocol": "async_buff", "async_buffer_size": 3})
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(3, vocab=512, seq_len=32, seed=0)
+    # register with skewed poll cadences (scheduler agents not yet built)
+    for org, d, cadence in zip(con.organizations, ds, (1, 1, 4)):
+        con.scheduler.register_agent(con.client_ids[org], d,
+                                     capacity=1, tick_every=cadence)
+    con.start(job, ds)
+    assert con.run_to_completion() == "done"
+    taus = [t for c in con.server.metadata.query(
+                kind="provenance", operation="async_commit")
+            for t in c["details"]["staleness"]]
+    assert any(t > 0 for t in taus), "skewed fleet produced no staleness"
+    # every silo contributed, including the slow one (client-side training
+    # provenance lives in each agent's own metadata store)
+    slow_cid = con.client_ids["slow"]
+    posts = [p for p in
+             con.scheduler.agents[slow_cid].metadata.query(
+                 kind="provenance")
+             if p["operation"] == "local_train_async"]
+    assert posts, "the slow silo never contributed an async update"
+
+
+def test_async_rejects_secure_and_robust_and_hp():
+    con = Consortium(["a", "b"], seed=0)
+    jc = con.server.job_creator
+    base = {"arch": ARCH, "rounds": 1, "local_steps": 1, "batch_size": 2,
+            "data_schema": None, "protocol": "async_buff"}
+    with pytest.raises(ValueError, match="secure_aggregation"):
+        jc.from_admin("admin", {**base, "secure_aggregation": True})
+    with pytest.raises(ValueError, match="aggregation"):
+        jc.from_admin("admin", {**base, "secure_aggregation": False,
+                                "aggregation": "median"})
+    with pytest.raises(ValueError, match="hyperparameter"):
+        jc.from_admin("admin", {**base, "secure_aggregation": False,
+                                "hyperparameter_search":
+                                    {"parameter": "lr", "values": [1e-3]}})
+    with pytest.raises(ValueError, match="unknown protocol"):
+        jc.from_admin("admin", {**base, "protocol": "gossip",
+                                "secure_aggregation": False})
+
+
+def test_async_resume_after_budget_does_not_overcommit():
+    """Regression: a pause that lands after the commit budget was
+    exhausted (final evaluate) must resume into evaluate, not re-enter
+    async_serve and fold an extra commit past job.rounds."""
+    con = _consortium(["a", "b"], {
+        "secure_aggregation": False, "protocol": "async_buff",
+        "rounds": 2, "async_buffer_size": 2})
+    server = con.server
+    for _ in range(300):
+        con.scheduler.step()
+        if server.run.phase == "evaluate":
+            break
+    assert server.run.phase == "evaluate"
+    assert server.run.round == 2                 # budget exhausted
+    server.pause("operator", "paused during final evaluate")
+    server.admin_resume("operator")
+    assert server.run.phase == "evaluate"        # NOT async_serve
+    con.scheduler.reactivate(con.run_id)
+    assert con.run_to_completion() == "done"
+    assert server.run.round == 2                 # no extra commit
+    assert [h["round"] for h in server.run.history] == [0, 1]
+
+
+def test_async_pause_resume_keeps_serving():
+    """An externally paused async run resumes into async_serve and
+    finishes its commit budget (protocol-specific resume semantics)."""
+    con = _consortium(["a", "b"], {
+        "secure_aggregation": False, "protocol": "async_buff",
+        "rounds": 2, "async_buffer_size": 2})
+    server = con.server
+    for _ in range(200):
+        con.scheduler.step()
+        if server.run.history:          # at least one commit landed
+            break
+    server.pause("operator", "maintenance window")
+    assert server.run.phase == "paused"
+    server.admin_resume("operator")
+    assert server.run.phase == "async_serve"
+    con.scheduler.reactivate(con.run_id)
+    assert con.run_to_completion() == "done"
+    assert server.run.round == 2
+
+
+# ---------------------------------------------------------------------------
+# board tombstones (round GC vs wake snapshots)
+# ---------------------------------------------------------------------------
+def test_board_delete_leaves_observable_tombstone():
+    from repro.core import ClientManagement, MessageBoard, MetadataStore
+    md = MetadataStore()
+    board = MessageBoard(ClientManagement(md), md)
+    board.put_server("runs/r/round/0/0/update/c1", b"blob")
+    snapshot = board.seq
+    assert board.latest_seq(["runs/r/round/0/0/update/c1"]) == snapshot
+    board.delete("runs/r/round/0/0/update/c1")
+    # the deletion is a mutation: watchers comparing against the snapshot
+    # must wake instead of sleeping on a path that no longer exists
+    assert board.latest_seq(["runs/r/round/0/0/update/c1"]) > snapshot
+    assert board.stats["deletes"] == 1
+    # deleting a missing path is a no-op (no seq bump, no tombstone)
+    seq = board.seq
+    board.delete("runs/r/nothing")
+    assert board.seq == seq and board.stats["deletes"] == 1
+    # re-creating the path supersedes the tombstone
+    board.put_server("runs/r/round/0/0/update/c1", b"blob2")
+    assert board.latest_seq(["runs/r/round/0/0/update/c1"]) == board.seq
+    assert "runs/r/round/0/0/update/c1" not in board._tombstones
+
+
+def test_board_tombstones_bounded_with_safe_floor():
+    """The tombstone map is LRU-bounded; evicted entries collapse into a
+    floor seq that unknown paths report — a watcher may wake spuriously
+    once, but never misses a deletion (over-report, never under-report)."""
+    from repro.core import ClientManagement, MessageBoard, MetadataStore
+    md = MetadataStore()
+    board = MessageBoard(ClientManagement(md), md)
+    board.TOMBSTONE_CAP = 2
+    for i in range(4):
+        board.put_server(f"runs/r/round/0/{i}/update/c", b"x")
+    deletion_seqs = {}
+    for i in range(3):
+        path = f"runs/r/round/0/{i}/update/c"
+        board.delete(path)
+        deletion_seqs[path] = board.seq
+    assert len(board._tombstones) == 2            # oldest evicted
+    evicted = "runs/r/round/0/0/update/c"
+    assert evicted not in board._tombstones
+    # the evicted path reports the floor: >= its true deletion seq, so a
+    # snapshot taken before the delete still observes a change
+    assert board.latest_seq([evicted]) >= deletion_seqs[evicted]
+    # retained tombstones still report their exact deletion seq
+    kept = "runs/r/round/0/2/update/c"
+    assert board.latest_seq([kept]) == deletion_seqs[kept]
