@@ -15,6 +15,8 @@ from repro.core.client import (ClientAgent, ClientConfig, FLClientNode,
 from repro.core.clients import ClientManagement  # noqa: F401
 from repro.core.communicator import (ClientCommunicator, MessageBoard,
                                      ServerCommunicator)  # noqa: F401
+from repro.core.compression import (SCHEMES, ErrorFeedback,
+                                    reduce_compressed)  # noqa: F401
 from repro.core.governance import (DEFAULT_DECISIONS, GovernanceCockpit,
                                    GovernanceContract)  # noqa: F401
 from repro.core.jobs import FLJob, JobCreator  # noqa: F401

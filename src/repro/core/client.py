@@ -126,6 +126,9 @@ class FLClientNode:
         self.eval_hp = 0
         self.said_hello = False
         self.posted_stats = False
+        # compressed data plane (DESIGN.md §Compressed data plane):
+        # error-feedback residual state, created with the job
+        self._ef = None
         # liveness + dropout repair (DESIGN.md §Dropout-tolerant rounds)
         self._hb = 0
         self._packed_size: Optional[int] = None
@@ -184,6 +187,10 @@ class FLClientNode:
             self.round_done = -1
             self.eval_done = -1
             self._repair_done = None
+            if self._ef is not None:
+                # the aborted attempt's posted update was wiped server-side,
+                # so the residual refers to mass the server never folded
+                self._ef.reset()
         phase = status["phase"]
         if phase == "paused":
             self._notify(f"run paused: {status.get('pause_reason')}")
@@ -207,6 +214,9 @@ class FLClientNode:
         # concurrent jobs on one architecture compiles once, not N times
         self.cfg, self.model, self._loss_jit = shared_model(
             job.arch, job.reduced)
+        if job.compression != "none":
+            from repro.core.compression import make_error_feedback
+            self._ef = make_error_feedback(job, self.client_id)
         self.metadata.record_provenance(
             actor=self.client_id, operation="fetch_job", subject=job.job_id,
             outcome="configured", details={"arch": job.arch})
@@ -252,9 +262,9 @@ class FLClientNode:
         msg = self.comm.fetch(f"{base}/global", broadcast=True)
         if msg is None:
             return "waiting_global"
+        base_params = jax.tree.map(jnp.asarray, msg["params"])
         params, loss, n_examples = self._train_local(
-            jax.tree.map(jnp.asarray, msg["params"]),
-            float(status.get("lr", self.job.lr)))
+            base_params, float(status.get("lr", self.job.lr)))
         if self.job.secure_aggregation:
             # packed data plane: flatten once, mask the whole buffer in one
             # vectorized pass, post the (T,) fp32 buffer — the server never
@@ -274,6 +284,18 @@ class FLClientNode:
                 buf * jnp.float32(weight), self.client_id, round_cohort,
                 self.pair_secret)
             payload = {"packed": np.asarray(masked),
+                       "n_examples": n_examples, "train_loss": loss}
+        elif self.job.compression != "none":
+            # compressed data plane: post the error-feedback-corrected,
+            # lossy-coded packed *delta* (the server reconstructs
+            # base + weighted-mean delta — algebraically the same FedAvg).
+            # A hyperparameter restart jumps the global back to init, so
+            # the carried residual is stale and is dropped with it.
+            from repro.core.protocol import pack_delta
+            if self.hp_seen != hp:
+                self._ef.reset()
+            payload = {"comp": self._ef.step(pack_delta(params,
+                                                        base_params)),
                        "n_examples": n_examples, "train_loss": loss}
         else:
             payload = {"params": jax.tree.map(np.asarray, params),
@@ -306,10 +328,20 @@ class FLClientNode:
         params, loss, n_examples = self._train_local(
             base_params, float(status.get("lr", self.job.lr)))
         from repro.core.protocol import pack_delta
+        delta = pack_delta(params, base_params)
+        if self.job.compression != "none":
+            # same error-feedback state as the sync path. Telescoping
+            # assumes every post gets folded; async posts overwrite in
+            # place, so a deployment where clients post faster than the
+            # server folds would drop overwritten posts' mass (here the
+            # scheduler folds between client passes, so each post lands)
+            payload = {"comp": self._ef.step(delta), "base_commit": rnd,
+                       "n_examples": n_examples, "train_loss": loss}
+        else:
+            payload = {"delta": delta, "base_commit": rnd,
+                       "n_examples": n_examples, "train_loss": loss}
         self.comm.post(f"runs/{self.run_id}/async/update/{self.client_id}",
-                       {"delta": pack_delta(params, base_params),
-                        "base_commit": rnd, "n_examples": n_examples,
-                        "train_loss": loss})
+                       payload)
         self.metadata.record_provenance(
             actor=self.client_id, operation="local_train_async",
             subject=f"{self.run_id}/c{rnd}", outcome="update_posted",

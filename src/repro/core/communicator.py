@@ -64,7 +64,8 @@ class MessageBoard:
         self._tombstone_floor = 0         # max seq among evicted tombstones
         self.seq = 0                      # monotonic board mutation counter
         self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
-                      "rejected": 0, "deletes": 0}
+                      "bytes_posted_clients": 0, "rejected": 0,
+                      "deletes": 0}
 
     def _put(self, path: str, blob: bytes, author: str):
         prev = self._resources.get(path)
@@ -75,6 +76,10 @@ class MessageBoard:
             seq=self.seq)
         self.stats["posts"] += 1
         self.stats["bytes_posted"] += len(blob)
+        if author != "server":
+            # silo-uploaded bytes: the WAN cost the compressed data plane
+            # exists to shrink (bench_compression reports this counter)
+            self.stats["bytes_posted_clients"] += len(blob)
 
     # server-side put (no token needed, done by the coordinator process)
     def put_server(self, path: str, blob: bytes):
@@ -127,7 +132,13 @@ class MessageBoard:
         return latest
 
     def list(self, pattern: str) -> List[str]:
-        return sorted(p for p in self._resources if fnmatch.fnmatch(p, pattern))
+        # fnmatchcase, not fnmatch: fnmatch case-folds both sides via
+        # os.path.normcase, so on macOS/Windows hosts "update/OrgA" would
+        # match a pattern written for "update/orga". Resource paths embed
+        # case-sensitive client ids — matching must be byte-exact on
+        # every platform.
+        return sorted(p for p in self._resources
+                      if fnmatch.fnmatchcase(p, pattern))
 
     def delete(self, path: str):
         """Remove a resource, leaving a per-path trace: the deletion bumps

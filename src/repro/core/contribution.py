@@ -10,7 +10,7 @@ Three measures, cheapest to priciest:
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -24,8 +24,13 @@ def data_size_contribution(sizes: Dict[str, int]) -> Dict[str, float]:
     return {cid: s / total for cid, s in sizes.items()}
 
 
-def update_norm_contribution(updates: Dict[str, dict],
-                             base) -> Dict[str, float]:
+def update_norm_contribution(updates: Dict[str, dict], base,
+                             weights: Optional[Dict[str, float]] = None
+                             ) -> Dict[str, float]:
+    """Gradient-energy shares. Under weighted FedAvg the aggregate commits
+    ``w_i * delta_i``, so each norm is scaled by the client's ``w_i``
+    (``weights``, e.g. the round's n_examples) — an unweighted norm would
+    score a counterfactual update the server never applied."""
     norms = {}
     for cid, upd in updates.items():
         sq = 0.0
@@ -33,24 +38,38 @@ def update_norm_contribution(updates: Dict[str, dict],
             d = np.asarray(u, np.float64) - np.asarray(b, np.float64)
             sq += float((d * d).sum())
         norms[cid] = sq ** 0.5
+        if weights is not None:
+            norms[cid] *= float(weights[cid])
     total = sum(norms.values()) or 1.0
     return {cid: n / total for cid, n in norms.items()}
 
 
 def leave_one_out_contribution(updates: Dict[str, dict],
-                               eval_fn: Callable[[dict], float]
+                               eval_fn: Callable[[dict], float],
+                               weights: Optional[Dict[str, float]] = None
                                ) -> Dict[str, float]:
-    """contribution_i = loss(without i) - loss(with all); positive = helpful."""
+    """contribution_i = loss(without i) - loss(with all); positive = helpful.
+
+    ``weights`` (n_examples under weighted FedAvg) make every
+    re-aggregation — full cohort and each leave-one-out counterfactual —
+    use the same weighting the server actually committed; an unweighted
+    LOO would compare against aggregates that never existed.
+    """
     cids = sorted(updates)
-    full = fedavg([updates[c] for c in cids])
-    full_loss = eval_fn(full)
+
+    def agg(members):
+        ups = [updates[c] for c in members]
+        w = [weights[c] for c in members] if weights is not None else None
+        return fedavg(ups, w)
+
+    full_loss = eval_fn(agg(cids))
     out = {}
     for cid in cids:
-        rest = [updates[c] for c in cids if c != cid]
+        rest = [c for c in cids if c != cid]
         if not rest:
             out[cid] = 0.0
             continue
-        loo_loss = eval_fn(fedavg(rest))
+        loo_loss = eval_fn(agg(rest))
         out[cid] = float(loo_loss - full_loss)
     return out
 

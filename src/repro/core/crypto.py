@@ -35,27 +35,48 @@ def _xor(data: bytes, stream: bytes) -> bytes:
     return (a ^ b).tobytes()
 
 
-# auto-compression probe: payloads above this size get a prefix sampled and
-# test-compressed; a ratio worse than _PROBE_RATIO means "mostly
-# incompressible" (fp32 weight bytes) and compression is skipped entirely
+# auto-compression probe: payloads above this size get head, middle and
+# tail slices sampled and test-compressed; any slice with a ratio worse
+# than _PROBE_RATIO means "substantially incompressible" (fp32 weight
+# bytes) and compression is skipped entirely
 _PROBE_BYTES = 64 * 1024
+_PROBE_SLICE = _PROBE_BYTES // 3
 _PROBE_RATIO = 0.9
 
 
 def _compression_pays(plaintext: bytes) -> bool:
-    head = plaintext[:_PROBE_BYTES]
-    return len(zlib.compress(head, 1)) < _PROBE_RATIO * len(head)
+    """Predict whether zlib over the whole payload is worth it.
+
+    A head-only probe mispredicts the common adversarial layout: a
+    compressible msgpack/control header followed by an incompressible
+    fp32 body — the 64KB prefix compresses beautifully, then zlib churns
+    through hundreds of megabytes of weight bytes for ~0% saving. So the
+    probe samples head, middle AND tail slices, and only predicts a win
+    when *every* region looks compressible: large payloads are dominated
+    by their bulk, and a single incompressible region already caps the
+    overall ratio near 1. (Skipping a marginally-compressible payload is
+    cheap; compressing a near-incompressible one used to dominate every
+    large post.)
+    """
+    n = len(plaintext)
+    k = _PROBE_SLICE
+    mid = (n - k) // 2
+    slices = (plaintext[:k], plaintext[mid:mid + k], plaintext[n - k:])
+    return all(len(zlib.compress(s, 1)) < _PROBE_RATIO * len(s)
+               for s in slices)
 
 
 def encrypt(key: bytes, plaintext: bytes, *, compress="auto") -> bytes:
     """zlib-compress, encrypt (SHAKE-256 stream), authenticate (HMAC-SHA256).
 
-    ``compress="auto"`` (default) samples a 64KB prefix before touching a
-    large payload: masked fp32 weight buffers are near-incompressible, and
-    running zlib over hundreds of MB to save ~1% used to dominate every
-    post. Small payloads (control messages) always compress at level 6;
-    large compressible ones at level 1. ``compress=True/False`` force the
-    old behaviour.
+    ``compress="auto"`` (default) samples head, middle and tail slices of
+    a large payload and compresses only when *every* region looks
+    compressible (``_compression_pays``): masked fp32 weight buffers are
+    near-incompressible, and running zlib over hundreds of MB to save ~1%
+    used to dominate every post — even when a compressible control header
+    led the buffer. Small payloads (control messages) always compress at
+    level 6; large compressible ones at level 1. ``compress=True/False``
+    force the old behaviour.
     """
     if compress == "auto":
         compress = (len(plaintext) <= _PROBE_BYTES

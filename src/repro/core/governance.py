@@ -63,6 +63,9 @@ DEFAULT_DECISIONS = {
     "priority": 0,                    # federation-scheduler admission rank
     "protocol": "sync",               # sync | async_buff (protocol programs)
     "async_buffer_size": 4,           # async_buff: updates folded per commit
+    "compression": "none",            # none | topk | int8 (compressed plane)
+    "compression_ratio": 0.1,         # topk: fraction of coordinates kept
+    "quant_bits": 8,                  # int8: bits per quantized value (2..8)
 }
 
 

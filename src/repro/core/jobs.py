@@ -67,6 +67,21 @@ class FLJob:
     #     global model. job.rounds then counts *commits*.
     protocol: str = "sync"
     async_buffer_size: int = 4
+    # compressed data plane (DESIGN.md §Compressed data plane):
+    #   compression — negotiated lossy coding of posted update buffers:
+    #     "none" (raw fp32 packed buffers), "topk" (magnitude
+    #     sparsification to index+value pairs) or "int8" (per-chunk
+    #     stochastic quantization). Clients carry error-feedback
+    #     residuals so convergence tracks the uncompressed twin.
+    #     Incompatible with secure_aggregation: pairwise masks only
+    #     cancel when transmitted bit-exactly, and lossy coding destroys
+    #     that (see _validate).
+    #   compression_ratio — topk only: fraction of coordinates kept.
+    #   quant_bits — int8 only: bits per quantized value (2..8; values
+    #     ride the wire as int8 regardless).
+    compression: str = "none"
+    compression_ratio: float = 0.1
+    quant_bits: int = 8
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -134,6 +149,9 @@ class JobCreator:
             gc_round_resources=bool(d.get("gc_round_resources", False)),
             protocol=d.get("protocol", "sync"),
             async_buffer_size=int(d.get("async_buffer_size", 4)),
+            compression=d.get("compression", "none"),
+            compression_ratio=float(d.get("compression_ratio", 0.1)),
+            quant_bits=int(d.get("quant_bits", 8)),
         )
 
     def _validate(self, d: dict):
@@ -193,3 +211,39 @@ class JobCreator:
                     "boundary to restart from)")
             if int(d.get("async_buffer_size", 4)) < 1:
                 raise ValueError("async_buffer_size must be >= 1")
+        # --- compressed data plane compatibility matrix ------------------
+        # allowed: plain/weighted sync fedavg, async_buff (staleness-
+        # weighted folds consume dequantized deltas). Rejected: secure
+        # aggregation (masks don't survive lossy coding) and the robust
+        # sort-based strategies (they need the full dense update matrix;
+        # sorting sparsified/quantized coordinates is meaningless).
+        compression = d.get("compression", "none")
+        from repro.core.compression import SCHEMES
+        if compression not in SCHEMES:
+            raise ValueError(f"unknown compression {compression!r}; "
+                             f"known: {sorted(SCHEMES)}")
+        if compression != "none":
+            if secure:
+                self.metadata.record_provenance(
+                    actor="job_creator", operation="create_job",
+                    subject=compression, outcome="rejected",
+                    details={"reason": "compression requires "
+                                       "secure_aggregation=False"})
+                raise ValueError(
+                    f"compression={compression!r} is incompatible with "
+                    f"secure_aggregation=True: pairwise masks only cancel "
+                    f"when both endpoints transmit them bit-exactly, and "
+                    f"lossy coding destroys the telescoping sum (disable "
+                    f"secure aggregation for compressed jobs)")
+            if agg != "fedavg":
+                raise ValueError(
+                    f"compression={compression!r} reduces a weighted "
+                    f"linear sum of dequantized deltas (fedavg); "
+                    f"aggregation={agg!r} needs the full dense update "
+                    f"matrix and is not supported compressed")
+            ratio = float(d.get("compression_ratio", 0.1))
+            if not 0.0 < ratio <= 1.0:
+                raise ValueError("compression_ratio must be in (0, 1]")
+            bits = int(d.get("quant_bits", 8))
+            if not 2 <= bits <= 8:
+                raise ValueError("quant_bits must be in [2, 8]")

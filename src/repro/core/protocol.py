@@ -290,10 +290,11 @@ class CollectPhase(Phase):
                                    "round_update")
         if msgs is None:
             return None
-        # masked rounds post one packed fp32 buffer, not a pytree; key by
-        # the job's data plane so a mismatched client fails loudly here at
-        # the collect boundary
+        # masked rounds post one packed fp32 buffer, compressed rounds a
+        # wire dict, plain rounds a pytree; key by the job's data plane so
+        # a mismatched client fails loudly here at the collect boundary
         updates = {c: (m["packed"] if r.job.secure_aggregation
+                       else m["comp"] if r.job.compression != "none"
                        else m["params"]) for c, m in msgs.items()}
         sizes = {c: m["n_examples"] for c, m in msgs.items()}
         losses = {c: m["train_loss"] for c, m in msgs.items()}
@@ -560,7 +561,14 @@ class AsyncServePhase(Phase):
         st = r.proto
         tau = max(0, r.round - int(msg["base_commit"]))
         w = staleness_weight(tau)
-        delta = np.asarray(msg["delta"], np.float32)
+        if r.job.compression != "none":
+            # compressed plane: the staleness-weighted fold consumes the
+            # dequantized delta — decompression happens exactly once, at
+            # fold time (the buffer only ever holds dense f32)
+            from repro.core.compression import decompress
+            delta = decompress(msg["comp"])
+        else:
+            delta = np.asarray(msg["delta"], np.float32)
         st["buffer"] = (w * delta if st["buffer"] is None
                         else st["buffer"] + w * delta)
         st["weight"] += w

@@ -359,6 +359,26 @@ class FLServer:
             total = secure_agg.aggregate_masked_packed(
                 stacked, np.ones(len(cids), np.float32), corrections=corr)
             new_global = unpack_pytree(total / denom, layout)
+        elif job.compression != "none":
+            # compressed data plane: clients posted lossy-coded packed
+            # *deltas* (wire dicts). One fused dequantize-scale-accumulate
+            # over the cohort (Pallas kernel on TPU, jnp oracle in
+            # interpret mode for int8; weighted scatter-add for topk),
+            # then a single unpack — base + weighted-mean delta is the
+            # same weighted FedAvg, since sum_i w_i (base + d_i) =
+            # base + sum_i w_i d_i under normalized weights.
+            from repro.core import compression
+            layout = PackedLayout.for_tree(old_params)
+            w = np.asarray([sizes[c] for c in cids], np.float64)
+            w = (w / w.sum()).astype(np.float32)
+            total, delta_norms = compression.reduce_compressed(
+                [updates[c] for c in cids], w, return_norms=True)
+            mean_delta = unpack_pytree(total, layout)
+            new_global = jax.tree.map(
+                lambda p, d: np.asarray(p, np.float32)
+                + np.asarray(d, np.float32).reshape(np.shape(p)),
+                old_params, mean_delta)
+            comp_norms = dict(zip(cids, delta_norms))
         else:
             weights = ([sizes[c] for c in cids]
                        if job.aggregation == "fedavg" else None)
@@ -379,12 +399,22 @@ class FLServer:
             "aggregation": job.aggregation,
             "secure": job.secure_aggregation,
             "cohort": cids, "repaired": corrections is not None})
-        # contribution measurement (Evaluation Coordinator)
+        # contribution measurement (Evaluation Coordinator). Weighted
+        # FedAvg commits w_i * delta_i, so the norm measure is weighted by
+        # the same n_examples the aggregate used — an unweighted norm
+        # would score a counterfactual the server never committed.
         contrib = data_size_contribution(sizes)
-        if not job.secure_aggregation:
-            contrib_norm = update_norm_contribution(updates, old_params)
+        if job.secure_aggregation:
+            contrib_norm = {}            # server never sees plain updates
+        elif job.compression != "none":
+            # per-client delta norms fell out of the reduction pass above
+            raw = {c: comp_norms[c] * sizes[c] for c in cids}
+            total_norm = sum(raw.values()) or 1.0
+            contrib_norm = {c: n / total_norm for c, n in raw.items()}
         else:
-            contrib_norm = {}
+            contrib_norm = update_norm_contribution(
+                updates, old_params,
+                weights=sizes if job.aggregation == "fedavg" else None)
         metrics = {"mean_train_loss": float(np.mean(list(losses.values()))),
                    "train_losses": {k: float(v) for k, v in losses.items()}}
         self.metadata.record_round(r.run_id, r.round, metrics, digest,

@@ -1,0 +1,1 @@
+from repro.kernels.compressed_agg.ops import CHUNK, dequant_reduce  # noqa: F401

@@ -1,0 +1,67 @@
+"""Fused dequantize -> scale -> weighted-accumulate combine (TPU).
+
+The compressed data plane's server hot spot: N clients post int8
+per-chunk-quantized packed delta buffers; the Model Aggregator must
+dequantize each (q * per-chunk scale) and fold the cohort into one
+weighted f32 delta. Fusing the dequant with the reduction means the f32
+expansion of each client's buffer never round-trips to HBM — per
+(N, BT) VMEM tile the kernel reads N int8 rows plus N tiny scale rows
+and writes one f32 output row, an ~4x HBM-read saving over a separate
+dequant pass at int8.
+
+Grid: (T / BT,), BT a multiple of the 1024-float quantization chunk.
+Block: q (N, BT) int8; scales (N, BT/CHUNK) f32; weights (1, N) f32
+(broadcast). The per-chunk scales are broadcast across their chunk on
+the VPU; the weighted reduction is a (1, N) x (N, BT) matmul on the
+MXU, exactly like the masked combine in ``kernels/secure_agg``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+CHUNK = 1024          # quantization chunk: one f32 scale per 1024 floats
+DEFAULT_BT = 4096     # tile width — must stay a CHUNK multiple
+
+
+def _dequant_reduce_kernel(q_ref, s_ref, w_ref, o_ref):
+    """q_ref: (N, BT) int8; s_ref: (N, BT/CHUNK) f32; w_ref: (1, N) f32;
+    o_ref: (1, BT) f32.
+
+    The dequant (int8 -> f32 times the chunk scale) runs on the VPU; the
+    weighted accumulate across clients rides the MXU.
+    """
+    n, bt = q_ref.shape
+    bc = bt // CHUNK
+    q = q_ref[...].astype(jnp.float32).reshape(n, bc, CHUNK)
+    deq = (q * s_ref[...].reshape(n, bc, 1)).reshape(n, bt)
+    o_ref[...] = jnp.dot(w_ref[...], deq,
+                         preferred_element_type=jnp.float32)
+
+
+def dequant_reduce_flat(q, scales, weights, *, bt: int = DEFAULT_BT,
+                        interpret: bool = True):
+    """q: (N, T) int8, T a CHUNK multiple; scales: (N, T/CHUNK) f32;
+    weights: (N,) f32 -> (T,) f32 weighted dequantized sum."""
+    n, t = q.shape
+    if t % CHUNK:
+        raise ValueError(f"T={t} must be a multiple of CHUNK={CHUNK}")
+    bt = min(bt - bt % CHUNK or CHUNK, t)
+    pad = (-t) % bt
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // CHUNK)))
+    tp = t + pad
+    w = weights.astype(jnp.float32).reshape(1, n)
+    out = pl.pallas_call(
+        _dequant_reduce_kernel,
+        grid=(tp // bt,),
+        in_specs=[pl.BlockSpec((n, bt), lambda i: (0, i)),
+                  pl.BlockSpec((n, bt // CHUNK), lambda i: (0, i)),
+                  pl.BlockSpec((1, n), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, tp), jnp.float32),
+        interpret=interpret,
+    )(q, scales.astype(jnp.float32), w)
+    return out[0, :t]

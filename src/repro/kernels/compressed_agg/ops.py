@@ -1,0 +1,32 @@
+"""Public compressed-aggregation combine: fused dequantize-scale-accumulate
+over a cohort of int8 per-chunk-quantized packed delta buffers."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro import kernels
+from repro.kernels.compressed_agg import kernel as _k
+from repro.kernels.compressed_agg import ref as _ref
+
+CHUNK = _k.CHUNK
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dequant_reduce(q, scales, weights, *, interpret: bool = None):
+    """q: (N, T) int8 (T a CHUNK multiple); scales: (N, T/CHUNK) f32;
+    weights: (N,) f32 -> (T,) f32.
+
+    ``sum_i weights_i * dequant(q_i, scales_i)`` — the server-side
+    reduction of the compressed data plane (DESIGN.md §Compressed data
+    plane). On TPU (``kernels.INTERPRET = False``) this is the fused
+    Pallas combine; in interpret mode it falls back to the jnp oracle in
+    ``ref.py``, which is also the definition the kernel is parity-tested
+    against (tests/test_compression.py).
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    if interpret:
+        return _ref.dequant_reduce_ref(q, scales, weights)
+    return _k.dequant_reduce_flat(q, scales, weights, interpret=False)

@@ -1,0 +1,29 @@
+"""Oracle for the fused dequantize-scale-accumulate combine.
+
+dequant_reduce(q, scales, weights) =
+    sum_i weights_i * (q_i * expand(scales_i))
+
+q: (n_clients, T) int8 — per-client quantized packed delta buffers,
+    T a multiple of ``CHUNK`` (the compression layer pads)
+scales: (n_clients, T // CHUNK) f32 — per-chunk symmetric dequant scales
+    (one scale per 1024-float chunk, DESIGN.md §Compressed data plane)
+weights: (n_clients,) f32 — aggregation weights (FedAvg-normalized by
+    the caller; NOT normalized here, mirroring ``masked_sum``)
+
+``expand`` broadcasts each chunk scale over its 1024 elements. This is
+the definition the Pallas kernel is tested against, and the
+interpret-mode production fallback on CPU hosts.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.compressed_agg.kernel import CHUNK
+
+
+def dequant_reduce_ref(q, scales, weights):
+    n, t = q.shape
+    c = t // CHUNK
+    deq = (q.astype(jnp.float32).reshape(n, c, CHUNK)
+           * scales.astype(jnp.float32)[:, :, None]).reshape(n, t)
+    return jnp.tensordot(weights.astype(jnp.float32), deq, axes=(0, 0))

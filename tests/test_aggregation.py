@@ -92,3 +92,43 @@ def test_leave_one_out_contribution():
 
     out = leave_one_out_contribution(ups, eval_fn)
     assert out["good"] > out["bad"]
+
+
+def test_update_norm_contribution_uses_fedavg_weights():
+    """Weighted FedAvg commits w_i * delta_i: a small-norm update from a
+    heavy silo can contribute more committed energy than a large-norm
+    update from a feather-weight silo. The unweighted measure got this
+    backwards."""
+    base = trees([0.0])[0]
+    ups = {"heavy": trees([1.0])[0], "light": trees([3.0])[0]}
+    unweighted = update_norm_contribution(ups, base)
+    assert unweighted["light"] > unweighted["heavy"]
+    weighted = update_norm_contribution(ups, base,
+                                        weights={"heavy": 90, "light": 10})
+    assert weighted["heavy"] > weighted["light"]
+    # shares scale exactly with w_i * ||delta_i||: 90*1 vs 10*3
+    assert weighted["heavy"] == pytest.approx(0.75)
+    assert abs(sum(weighted.values()) - 1.0) < 1e-6
+
+
+def test_leave_one_out_uses_the_weights_the_server_committed():
+    """LOO must re-aggregate the counterfactual with the same n_examples
+    weighting the committed aggregate used. Unweighted LOO evaluates
+    aggregates the server never produced — here that flips which client
+    looks helpful."""
+    ups = {"big": trees([2.0])[0], "small": trees([8.0])[0]}
+    weights = {"big": 99, "small": 1}
+    # the *committed* (weighted) aggregate sits at ~2.06; distance-to-it
+    # is the eval. Weighted full aggregate: (99*2 + 1*8)/100 = 2.06
+    def eval_fn(params):
+        return float(np.abs(np.asarray(params["w"]) - 2.06).mean())
+
+    weighted = leave_one_out_contribution(ups, eval_fn, weights=weights)
+    # removing "big" leaves only small's 8.0 -> huge loss: big is vital
+    assert weighted["big"] > weighted["small"]
+    assert weighted["big"] == pytest.approx(
+        eval_fn(fedavg([ups["small"]])) - eval_fn(
+            fedavg([ups["big"], ups["small"]], [99, 1])))
+    # the unweighted counterfactual (mean of both = 5.0) misprices both
+    unweighted = leave_one_out_contribution(ups, eval_fn)
+    assert unweighted != weighted

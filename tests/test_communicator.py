@@ -1,4 +1,6 @@
 """Communicator: encryption, compression, auth, pull-based semantics."""
+import zlib
+
 import numpy as np
 import pytest
 
@@ -40,6 +42,43 @@ def test_crypto_roundtrip_and_tamper():
         crypto.decrypt(key, tampered)
     with pytest.raises(ValueError):
         crypto.decrypt(crypto.derive_key(MASTER, "other"), blob)
+
+
+def test_encrypt_auto_probe_sees_past_a_compressible_header():
+    """Adversarial layout for the old head-only probe: a compressible
+    msgpack/control header followed by an incompressible fp32 body. The
+    64KB-prefix probe predicted 'compresses great' and ran zlib over the
+    whole buffer for ~0% saving; the head+middle+tail probe must skip."""
+    key = crypto.derive_key(MASTER, "auto-adv")
+    rng = np.random.default_rng(1)
+    header = b'{"digest": "abc", "round": 3, "cohort": ["a","b"]} ' * 1300
+    header = header[:64 * 1024]                          # compressible 64KB
+    body = rng.standard_normal(2 ** 18).astype(np.float32).tobytes()
+    payload = header + body
+    assert len(zlib.compress(header, 1)) < 0.2 * len(header)
+    assert not crypto._compression_pays(payload)
+    blob = crypto.encrypt(key, payload)                  # default: auto
+    assert blob[32:33] == b"\x00"                        # skipped zlib
+    assert crypto.decrypt(key, blob) == payload
+    # a payload compressible throughout still compresses...
+    assert crypto._compression_pays(header * 20)
+    # ...and one incompressible only at the head is (conservatively)
+    # skipped too: the probe demands every region look compressible
+    assert not crypto._compression_pays(body[:64 * 1024] + header * 20)
+
+
+def test_board_list_matching_is_byte_exact_for_mixed_case_ids():
+    """Resource paths embed case-sensitive client ids; fnmatch.fnmatch
+    case-folds via os.path.normcase on macOS/Windows, so listing must go
+    through fnmatchcase — 'OrgA' and 'orga' are different silos."""
+    board, server, client, cid, token = make_stack()
+    board.put_server("runs/r/update/OrgA", b"x")
+    board.put_server("runs/r/update/orga", b"y")
+    board.put_server("runs/r/update/ORGA", b"z")
+    assert board.list("runs/r/update/OrgA") == ["runs/r/update/OrgA"]
+    assert board.list("runs/r/update/Org*") == ["runs/r/update/OrgA"]
+    assert board.list("runs/r/update/org*") == ["runs/r/update/orga"]
+    assert len(board.list("runs/r/update/*")) == 3
 
 
 def test_encrypt_auto_skips_compression_on_incompressible():
