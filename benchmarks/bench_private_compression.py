@@ -1,0 +1,249 @@
+"""Composable-privacy data plane benchmark (BENCH_private_compression.json).
+
+What does privacy cost on top of compression? Three twin sync runs over
+the same fleet, same seeds, same data, all int8-coded on the same fixed
+cohort grid (DESIGN.md §Composable privacy):
+
+  * int8-plain      — fixed-grid int8 + error feedback, no masking
+  * int8+secure     — the same stream masked in the integer domain
+                      (pairwise PRG residues mod 2**mbits)
+  * int8+secure+dp  — plus the per-silo DP stage (L2 clip + integer
+                      Gaussian noise) before masking
+
+Claims measured:
+  * wire: the masked stream is the raw 2-byte residue wire (uniform
+    residues defeat entropy coding) — a bounded, predictable overhead
+    over plain int8's zlib-packed bytes, still far below fp32
+  * convergence: masking is FREE — the +secure twin decodes the exact
+    integer sum the plain twin computes, so rounds-to-target matches
+    the plain twin's (twin-equivalence, tests/test_composable_privacy).
+    DP costs rounds by design (noise); its curve is reported, not
+    asserted against the 1.05x claim.
+  * determinism: with a fixed ``--dp-seed`` the DP twin reproduces its
+    trajectory bit-for-bit (asserted in --smoke).
+
+Method mirrors benchmarks/bench_compression.py: the plain twin's best
+probe loss on a fixed held-out batch is the target; each privacy twin
+gets a 2x round budget and is charged the round at which its
+running-best probe loss first meets the target.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+
+
+ARCH = "fedforecast-100m"
+QUANT_RANGE = 0.02            # cohort grid, shared by all three twins
+DP = {"dp_epsilon": 8.0, "dp_delta": 1e-5, "dp_clip": 1.0}
+
+
+def variants(dp_seed):
+    return (
+        {"name": "int8-plain",
+         "decisions": {"compression": "int8", "quant_range": QUANT_RANGE,
+                       "secure_aggregation": False}},
+        {"name": "int8+secure",
+         "decisions": {"compression": "int8", "quant_range": QUANT_RANGE,
+                       "secure_aggregation": True}},
+        {"name": "int8+secure+dp",
+         "decisions": {"compression": "int8", "quant_range": QUANT_RANGE,
+                       "secure_aggregation": True, **DP,
+                       "dp_seed": dp_seed}},
+    )
+
+
+def build_fleet(n_silos):
+    from repro.core import FederationScheduler
+    from repro.data.synthetic import SiloDataset
+    sched = FederationScheduler(b"bench-privacy-key".ljust(32, b"0"))
+    cids = [sched.bootstrap_silo(
+        f"org{i:02d}", SiloDataset(f"silo-{i}", 512, 32, i), capacity=1)
+        for i in range(n_silos)]
+    return sched, cids
+
+
+def make_probe(arch, n_silos):
+    import jax.numpy as jnp
+    from repro.core.client import shared_model
+    from repro.data.synthetic import SiloDataset
+    _, _, loss_jit = shared_model(arch, reduced=True)
+    parts = []
+    for i in range(n_silos):
+        ds = SiloDataset(f"twin-s{i}", 512, 32, 7000 + i)
+        ds._rng = np.random.default_rng(990_000 + i)   # held-out draws
+        parts.append(ds.batch(4)["tokens"])
+    batch = {"tokens": jnp.asarray(np.concatenate(parts))}
+
+    def probe(params):
+        loss, _ = loss_jit(params, batch)
+        return float(loss)
+    return probe
+
+
+def submit(sched, cids, *, decisions, rounds, seed=0):
+    from repro.core.jobs import JobCreator
+    from repro.data.synthetic import SiloDataset
+    jc = JobCreator(sched.metadata)
+    job = jc.from_admin("bench", {
+        "arch": ARCH, "rounds": rounds, "local_steps": 4, "batch_size": 4,
+        "lr": 3e-3, "data_schema": None, **decisions})
+    # stable silo ids ("twin-s{i}") — the noise streams (stochastic
+    # rounding, DP) key off them, which is what makes twin runs and
+    # fixed-seed DP reruns reproducible
+    datasets = {cid: SiloDataset(f"twin-s{i}", 512, 32, 7000 + i)
+                for i, cid in enumerate(cids)}
+    return sched.submit(job, server=sched.new_server(seed=seed),
+                        datasets=datasets)
+
+
+def drive(sched, run_id, probe, max_passes=5000):
+    entry = sched.entries[run_id]
+    server = entry.server
+    curve = []
+    seen = 0
+    t0 = time.perf_counter()
+    for _ in range(max_passes):
+        sched.step()
+        hist = server.run.history
+        while seen < len(hist):
+            h = hist[seen]
+            seen += 1
+            curve.append({"round": h["round"],
+                          "probe_loss": probe(server.store.get(h["digest"]))})
+        if entry.state in ("done", "failed"):
+            break
+    assert entry.state == "done", entry.state
+    board = server.board
+    update_bytes = sum(
+        board.stat(p)["bytes"]
+        for p in board.list(f"runs/{run_id}/round/*/update/*"))
+    return curve, {
+        "wall_s": time.perf_counter() - t0,
+        "rounds_completed": len(curve),
+        "update_bytes_total": update_bytes,
+        "update_bytes_per_round": update_bytes / max(1, len(curve)),
+        "bytes_posted_clients": board.stats["bytes_posted_clients"],
+    }
+
+
+def rounds_to_target(curve, target):
+    best = float("inf")
+    for i, point in enumerate(curve):
+        best = min(best, point["probe_loss"])
+        if best <= target:
+            return i + 1
+    return None
+
+
+def run_bench(*, n_silos=8, rounds=6, dp_seed=0, write_json=True):
+    probe = make_probe(ARCH, n_silos)
+    results = {}
+    for var in variants(dp_seed):
+        name = var["name"]
+        budget = rounds if name == "int8-plain" else 2 * rounds
+        sched, cids = build_fleet(n_silos)
+        run_id = submit(sched, cids, decisions=var["decisions"],
+                        rounds=budget)
+        curve, stats = drive(sched, run_id, probe)
+        results[name] = {"curve": curve, **stats,
+                         "rounds_budget": budget,
+                         "decisions": var["decisions"]}
+        assert sched.metadata.verify_chain()
+        dp_recs = [r for r in sched.metadata.query(kind="provenance")
+                   if r["operation"] == "dp_accounting"]
+        if var["decisions"].get("dp_epsilon"):
+            assert dp_recs, "dp run must record accounting provenance"
+            results[name]["dp_accounting"] = dp_recs[-1]["details"]
+
+    base = results["int8-plain"]
+    # 1e-3 slack: twins match to ~1e-4 (fp32 reduction ordering), so an
+    # exact-minimum target would tie-break against whichever twin landed
+    # an ulp higher; the slacked target charges all variants symmetrically
+    target = min(p["probe_loss"] for p in base["curve"]) + 1e-3
+    base_rtt = rounds_to_target(base["curve"], target)
+    for name, res in results.items():
+        rtt = rounds_to_target(res["curve"], target)
+        res["rounds_to_target"] = rtt
+        res["rounds_to_target_vs_plain"] = (rtt / base_rtt
+                                            if rtt is not None else None)
+        res["wire_overhead_vs_plain_x"] = (res["update_bytes_per_round"]
+                                           / base["update_bytes_per_round"])
+        print(f"{name:>15}: {res['update_bytes_per_round'] / 2**20:6.2f} "
+              f"MiB/round ({res['wire_overhead_vs_plain_x']:4.2f}x plain), "
+              f"rounds-to-target {rtt} "
+              f"({res['rounds_to_target_vs_plain']}x)")
+
+    report = {"n_silos": n_silos, "rounds": rounds, "dp_seed": dp_seed,
+              "quant_range": QUANT_RANGE, "dp": DP,
+              "target_probe_loss": target,
+              "unit_note": ("update bytes = round-update resources as "
+                            "stored on the board (post-msgpack, "
+                            "post-crypto; masked streams are raw 2-byte "
+                            "residues — uniform, uncompressible); target "
+                            "= best held-out probe loss of the plain "
+                            "int8 twin"),
+              "results": results}
+    if write_json:
+        path = os.path.join(_REPO_ROOT, "BENCH_private_compression.json")
+        with open(path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {path}")
+    return report
+
+
+def run_smoke(dp_seed=0):
+    """Tiny CI pass: 3 silos, 2 rounds — exercises all three privacy
+    twins end to end (masked collect, fused masked reduce, DP stage,
+    byte accounting) plus the fixed-seed DP determinism contract."""
+    report = run_bench(n_silos=3, rounds=2, dp_seed=dp_seed,
+                       write_json=False)
+    results = report["results"]
+    for v in variants(dp_seed):
+        assert results[v["name"]]["rounds_completed"] >= 2, v["name"]
+    # masking costs nothing: the secure twin decodes the exact integer
+    # sum the plain twin computes (same grid, same silo seeds) — its
+    # probe curve tracks the plain one to fp32-ordering noise, and it
+    # meets the (slacked) target in the same number of rounds
+    gap = max(abs(a["probe_loss"] - b["probe_loss"])
+              for a, b in zip(results["int8-plain"]["curve"],
+                              results["int8+secure"]["curve"]))
+    assert gap <= 1e-3, f"secure twin curve diverged: {gap}"
+    assert (results["int8+secure"]["rounds_to_target"]
+            == results["int8-plain"]["rounds_to_target"])
+    # bounded wire overhead: raw 2 B/value residues vs zlib'd int8
+    assert results["int8+secure"]["wire_overhead_vs_plain_x"] < 3.0
+    # fixed-seed DP determinism: same dp_seed => identical trajectory
+    rerun = run_bench(n_silos=3, rounds=2, dp_seed=dp_seed,
+                      write_json=False)
+    a = results["int8+secure+dp"]["curve"]
+    b = rerun["results"]["int8+secure+dp"]["curve"]
+    assert a == b, "fixed-seed DP run did not reproduce"
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape smoke pass (no JSON written)")
+    ap.add_argument("--dp-seed", type=int, default=0,
+                    help="fixed seed for the DP noise streams "
+                         "(reproducible trajectories)")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke(dp_seed=args.dp_seed)
+    else:
+        report = run_bench(dp_seed=args.dp_seed)
+        res = report["results"]
+        ratio = res["int8+secure"]["rounds_to_target_vs_plain"]
+        assert ratio is not None and ratio <= 1.05, \
+            f"secure+int8 convergence cost {ratio} > 1.05x"
+        assert res["int8+secure"]["wire_overhead_vs_plain_x"] < 3.0

@@ -216,7 +216,14 @@ class FLClientNode:
             job.arch, job.reduced)
         if job.compression != "none":
             from repro.core.compression import make_error_feedback
-            self._ef = make_error_feedback(job, self.client_id)
+            # noise streams (stochastic rounding, DP) key off the silo's
+            # stable identity, not the registered device id — device ids
+            # are minted fresh every registration (clients.py uuid), and
+            # reproducibility (twin runs, fixed-seed DP benches) needs a
+            # re-run over the same silo to draw the same streams
+            noise_id = str(getattr(self.dataset, "silo_id", None)
+                           or self.client_id)
+            self._ef = make_error_feedback(job, noise_id)
         self.metadata.record_provenance(
             actor=self.client_id, operation="fetch_job", subject=job.job_id,
             outcome="configured", details={"arch": job.arch})
@@ -265,7 +272,31 @@ class FLClientNode:
         base_params = jax.tree.map(jnp.asarray, msg["params"])
         params, loss, n_examples = self._train_local(
             base_params, float(status.get("lr", self.job.lr)))
-        if self.job.secure_aggregation:
+        if self.job.secure_aggregation and self.job.compression != "none":
+            # masked-quantized plane (DESIGN.md §Composable privacy): the
+            # error-feedback compressor quantizes the weighted packed
+            # *delta* onto the cohort-common fixed grid, optionally adds
+            # integer-domain DP noise, and masks the widened stream mod
+            # 2**mbits against *this round's* cohort — the server's
+            # modular sum cancels the masks bit-exactly and decodes one
+            # cohort total. Pre-scaling by n_examples/weight_denom keeps
+            # weighted FedAvg exact under the uniform modular sum, same
+            # as the fp32 masked plane below.
+            from repro.core.protocol import pack_delta
+            round_cohort = sorted(msg.get("cohort") or self.cohort)
+            weight = n_examples / float(
+                msg.get("weight_denom")
+                or (self.job.local_steps * self.job.batch_size))
+            if self.hp_seen != hp:
+                self._ef.reset()
+            delta = pack_delta(params, base_params)
+            self._packed_size = int(delta.size)
+            payload = {"comp": self._ef.step_masked(
+                           delta, weight=weight, client_id=self.client_id,
+                           cohort=round_cohort,
+                           pair_secret=self.pair_secret),
+                       "n_examples": n_examples, "train_loss": loss}
+        elif self.job.secure_aggregation:
             # packed data plane: flatten once, mask the whole buffer in one
             # vectorized pass, post the (T,) fp32 buffer — the server never
             # sees per-tensor structure of the masked update. Masks are
@@ -371,10 +402,30 @@ class FLClientNode:
             size = self._packed_size = int(sum(
                 np.asarray(l).size
                 for l in jax.tree.leaves(glob["params"])))
-        corr = secure_agg.repair_correction(
-            size, self.client_id, info["dropped"], self.pair_secret)
+        if self.job.compression != "none":
+            # masked-quantized plane: the correction is an integer mask
+            # stream over the padded buffer, mod the same modulus both
+            # endpoints derive from the *round* cohort (survivors plus
+            # dropped — the cohort the orphaned masks were drawn against)
+            from repro.core import compression
+            tpad = size + (-size) % compression.CHUNK
+            mbits = secure_agg.mask_modulus_bits(
+                len(info["survivors"]) + len(info["dropped"]),
+                self.job.quant_bits)
+            corr = secure_agg.int_repair_correction(
+                tpad, self.client_id, info["dropped"], self.pair_secret,
+                mbits)
+            wire_dtype = np.uint16 if mbits <= 16 else np.uint32
+            payload = {"correction": (np.asarray(corr, np.uint32)
+                                      & np.uint32((1 << mbits) - 1)
+                                      ).astype(wire_dtype),
+                       "mbits": mbits}
+        else:
+            corr = secure_agg.repair_correction(
+                size, self.client_id, info["dropped"], self.pair_secret)
+            payload = {"correction": np.asarray(corr)}
         self.comm.post(f"{base}/repair/{info['epoch']}/{self.client_id}",
-                       {"correction": np.asarray(corr)})
+                       payload)
         self._repair_done = key
         self.metadata.record_provenance(
             actor=self.client_id, operation="mask_repair",

@@ -33,11 +33,20 @@ def update_norm_contribution(updates: Dict[str, dict], base,
     score a counterfactual update the server never applied."""
     norms = {}
     for cid, upd in updates.items():
-        sq = 0.0
-        for u, b in zip(jax.tree.leaves(upd), jax.tree.leaves(base)):
-            d = np.asarray(u, np.float64) - np.asarray(b, np.float64)
-            sq += float((d * d).sum())
-        norms[cid] = sq ** 0.5
+        if isinstance(upd, dict) and "scheme" in upd:
+            # compressed wire dict, not a parameter pytree: delegate to
+            # the compression layer's norm (which refuses masked_int8
+            # loudly — a masked residue stream carries no recoverable
+            # per-client norm, and zip-walking its fields as tree leaves
+            # would silently score garbage)
+            from repro.core.compression import update_norm
+            norms[cid] = update_norm(upd)
+        else:
+            sq = 0.0
+            for u, b in zip(jax.tree.leaves(upd), jax.tree.leaves(base)):
+                d = np.asarray(u, np.float64) - np.asarray(b, np.float64)
+                sq += float((d * d).sum())
+            norms[cid] = sq ** 0.5
         if weights is not None:
             norms[cid] *= float(weights[cid])
     total = sum(norms.values()) or 1.0

@@ -66,6 +66,13 @@ DEFAULT_DECISIONS = {
     "compression": "none",            # none | topk | int8 (compressed plane)
     "compression_ratio": 0.1,         # topk: fraction of coordinates kept
     "quant_bits": 8,                  # int8: bits per quantized value (2..8)
+    # composable privacy (DESIGN.md §Composable privacy): secure+int8
+    # masked-quantized rounds and the optional per-round DP noise stage
+    "quant_range": 0.0,               # fixed masked grid half-range (0=auto)
+    "dp_epsilon": 0.0,                # per-round ε (0 disables the stage)
+    "dp_delta": 1e-5,                 # per-round δ of the Gaussian mechanism
+    "dp_clip": 1.0,                   # per-silo L2 clip on the weighted delta
+    "dp_seed": 0,                     # base seed of per-silo noise streams
 }
 
 

@@ -82,6 +82,25 @@ class FLJob:
     compression: str = "none"
     compression_ratio: float = 0.1
     quant_bits: int = 8
+    # composable privacy (DESIGN.md §Composable privacy):
+    #   quant_range — secure+int8: half-range of the cohort-common fixed
+    #     quantization grid. Per-client adaptive scales cannot be applied
+    #     after a modular masked sum, so every cohort member quantizes on
+    #     the same grid; 0.0 = the compression layer's default. Also
+    #     honored by plain int8 (fixed-grid twin runs).
+    #   dp_epsilon / dp_delta / dp_clip — per-round (ε, δ)-DP on the
+    #     cohort sum: each silo L2-clips its weighted packed delta to
+    #     dp_clip and adds sigma_total/sqrt(N) Gaussian noise in the
+    #     integer domain before coding. dp_epsilon == 0 disables the
+    #     stage. Negotiated like any other decision and recorded on the
+    #     provenance chain at run start (server.start_run).
+    #   dp_seed — base seed of the per-silo noise streams, so smoke runs
+    #     can be made bit-deterministic (CI --dp-seed flag).
+    quant_range: float = 0.0
+    dp_epsilon: float = 0.0
+    dp_delta: float = 1e-5
+    dp_clip: float = 1.0
+    dp_seed: int = 0
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -152,24 +171,57 @@ class JobCreator:
             compression=d.get("compression", "none"),
             compression_ratio=float(d.get("compression_ratio", 0.1)),
             quant_bits=int(d.get("quant_bits", 8)),
+            quant_range=float(d.get("quant_range", 0.0)),
+            dp_epsilon=float(d.get("dp_epsilon", 0.0)),
+            dp_delta=float(d.get("dp_delta", 1e-5)),
+            dp_clip=float(d.get("dp_clip", 1.0)),
+            dp_seed=int(d.get("dp_seed", 0)),
         )
+
+    def _reject(self, d: dict, subject, reason: str, message: str):
+        """Record a matrix rejection on the provenance chain and raise.
+
+        The provenance event carries the FULL offending decision
+        combination in ``details`` (not just the subject): an auditor
+        reconstructing why a negotiated pairing was refused needs the
+        whole tuple, because the matrix rejects *combinations*, never
+        individual values.
+        """
+        self.metadata.record_provenance(
+            actor="job_creator", operation="create_job",
+            subject=str(subject), outcome="rejected",
+            details={"reason": reason, "decisions": {
+                "secure_aggregation": bool(d.get("secure_aggregation",
+                                                 True)),
+                "compression": d.get("compression", "none"),
+                "protocol": d.get("protocol", "sync"),
+                "aggregation": d.get("aggregation", "fedavg"),
+                "dp_epsilon": float(d.get("dp_epsilon", 0.0) or 0.0),
+                "hyperparameter_search":
+                    bool(d.get("hyperparameter_search"))}})
+        raise ValueError(message)
 
     def _validate(self, d: dict):
         """Reject unsupported combinations at job creation, not mid-round.
 
-        Pairwise masks only telescope through a linear reduction, so the
-        robust (sort-based) strategies cannot run on masked buffers —
-        sorting masked coordinates is meaningless. Weighted secure FedAvg
-        IS supported: clients pre-scale before masking (secure_agg.py).
+        The compatibility matrix (DESIGN.md §Composable privacy) in one
+        place: pairwise masks only telescope through a linear reduction
+        (secure => fedavg) over a synchronized cohort (secure => sync);
+        they survive int8 coding via integer-domain masking but NOT topk
+        (index sets leak the update support); the DP noise stage rides
+        the quantized integer plane (dp => int8 + sync). Every rejection
+        lands a provenance event carrying the full decision combination
+        (``_reject``); tests/test_composable_privacy.py pins the whole
+        cross-product to a golden table so cell changes are deliberate.
         """
         secure = bool(d.get("secure_aggregation", True))
         agg = d.get("aggregation", "fedavg")
+        compression = d.get("compression", "none")
+        protocol = d.get("protocol", "sync")
+        dp_epsilon = float(d.get("dp_epsilon", 0.0) or 0.0)
         if secure and agg != "fedavg":
-            self.metadata.record_provenance(
-                actor="job_creator", operation="create_job",
-                subject=str(agg), outcome="rejected",
-                details={"reason": "secure_aggregation requires fedavg"})
-            raise ValueError(
+            self._reject(
+                d, agg, "secure_aggregation requires fedavg",
                 f"secure_aggregation=True is incompatible with "
                 f"aggregation={agg!r}: pairwise masks only cancel through "
                 f"a linear reduction (use fedavg, or disable secure "
@@ -179,7 +231,6 @@ class JobCreator:
             raise ValueError("round_deadline_ticks must be >= 0")
         if int(d.get("min_cohort", 1)) < 1:
             raise ValueError("min_cohort must be >= 1")
-        protocol = d.get("protocol", "sync")
         from repro.core.protocol import PROTOCOLS
         if protocol not in PROTOCOLS:
             raise ValueError(f"unknown protocol {protocol!r}; known: "
@@ -189,23 +240,23 @@ class JobCreator:
             # sees individual (unmasked) contributions by construction —
             # pairwise masks cannot telescope across asynchronous folds
             if secure:
-                self.metadata.record_provenance(
-                    actor="job_creator", operation="create_job",
-                    subject=protocol, outcome="rejected",
-                    details={"reason": "async_buff requires "
-                                       "secure_aggregation=False"})
-                raise ValueError(
+                self._reject(
+                    d, protocol,
+                    "async_buff requires secure_aggregation=False",
                     "protocol='async_buff' is incompatible with "
                     "secure_aggregation=True: buffered folds consume "
                     "updates one at a time, so pairwise masks never "
                     "cancel (disable secure aggregation for async jobs)")
             if agg != "fedavg":
-                raise ValueError(
+                self._reject(
+                    d, protocol, "async_buff requires fedavg",
                     f"protocol='async_buff' folds a weighted linear "
                     f"buffer (fedavg); aggregation={agg!r} is not "
                     f"supported asynchronously")
             if d.get("hyperparameter_search"):
-                raise ValueError(
+                self._reject(
+                    d, protocol,
+                    "async_buff excludes hyperparameter_search",
                     "protocol='async_buff' does not support "
                     "hyperparameter_search (commits have no trial "
                     "boundary to restart from)")
@@ -213,30 +264,32 @@ class JobCreator:
                 raise ValueError("async_buffer_size must be >= 1")
         # --- compressed data plane compatibility matrix ------------------
         # allowed: plain/weighted sync fedavg, async_buff (staleness-
-        # weighted folds consume dequantized deltas). Rejected: secure
-        # aggregation (masks don't survive lossy coding) and the robust
-        # sort-based strategies (they need the full dense update matrix;
-        # sorting sparsified/quantized coordinates is meaningless).
-        compression = d.get("compression", "none")
+        # weighted folds consume dequantized deltas), secure+int8 (masks
+        # drawn over the quantized integer domain cancel exactly under
+        # the modular sum). Rejected: secure+topk (the index set IS the
+        # update support — masking values cannot hide which coordinates
+        # moved) and the robust sort-based strategies (they need the full
+        # dense update matrix; sorting sparsified/quantized coordinates
+        # is meaningless).
         from repro.core.compression import SCHEMES
         if compression not in SCHEMES:
             raise ValueError(f"unknown compression {compression!r}; "
                              f"known: {sorted(SCHEMES)}")
         if compression != "none":
-            if secure:
-                self.metadata.record_provenance(
-                    actor="job_creator", operation="create_job",
-                    subject=compression, outcome="rejected",
-                    details={"reason": "compression requires "
-                                       "secure_aggregation=False"})
-                raise ValueError(
+            if secure and compression != "int8":
+                self._reject(
+                    d, compression,
+                    "secure_aggregation composes with int8 only: topk "
+                    "index sets leak the update support",
                     f"compression={compression!r} is incompatible with "
-                    f"secure_aggregation=True: pairwise masks only cancel "
-                    f"when both endpoints transmit them bit-exactly, and "
-                    f"lossy coding destroys the telescoping sum (disable "
-                    f"secure aggregation for compressed jobs)")
+                    f"secure_aggregation=True: a top-k message transmits "
+                    f"the selected coordinate indices in the clear, so "
+                    f"the update's support leaks regardless of masking "
+                    f"(negotiate compression='int8', whose integer-domain "
+                    f"masks cancel exactly under the modular sum)")
             if agg != "fedavg":
-                raise ValueError(
+                self._reject(
+                    d, compression, "compression requires fedavg",
                     f"compression={compression!r} reduces a weighted "
                     f"linear sum of dequantized deltas (fedavg); "
                     f"aggregation={agg!r} needs the full dense update "
@@ -247,3 +300,27 @@ class JobCreator:
             bits = int(d.get("quant_bits", 8))
             if not 2 <= bits <= 8:
                 raise ValueError("quant_bits must be in [2, 8]")
+        if float(d.get("quant_range", 0.0)) < 0:
+            raise ValueError("quant_range must be >= 0")
+        # --- DP noise stage ----------------------------------------------
+        if dp_epsilon < 0:
+            raise ValueError("dp_epsilon must be >= 0")
+        if dp_epsilon > 0:
+            if compression != "int8":
+                self._reject(
+                    d, compression,
+                    "dp noise stage requires compression='int8'",
+                    f"dp_epsilon={dp_epsilon} needs compression='int8': "
+                    f"the clip+noise stage is calibrated on the packed "
+                    f"quantized-integer plane, got "
+                    f"compression={compression!r}")
+            if protocol != "sync":
+                self._reject(
+                    d, protocol, "dp noise stage requires protocol='sync'",
+                    f"dp_epsilon={dp_epsilon} needs protocol='sync': "
+                    f"staleness-discounted asynchronous folds break the "
+                    f"per-round sensitivity accounting")
+            if not 0 < float(d.get("dp_delta", 1e-5)) < 1:
+                raise ValueError("dp_delta must be in (0, 1)")
+            if float(d.get("dp_clip", 1.0)) <= 0:
+                raise ValueError("dp_clip must be > 0")

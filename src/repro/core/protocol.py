@@ -290,11 +290,12 @@ class CollectPhase(Phase):
                                    "round_update")
         if msgs is None:
             return None
-        # masked rounds post one packed fp32 buffer, compressed rounds a
-        # wire dict, plain rounds a pytree; key by the job's data plane so
-        # a mismatched client fails loudly here at the collect boundary
-        updates = {c: (m["packed"] if r.job.secure_aggregation
-                       else m["comp"] if r.job.compression != "none"
+        # compressed rounds (masked-quantized included) post a wire dict,
+        # plain masked rounds one packed fp32 buffer, plain rounds a
+        # pytree; key by the job's data plane so a mismatched client
+        # fails loudly here at the collect boundary
+        updates = {c: (m["comp"] if r.job.compression != "none"
+                       else m["packed"] if r.job.secure_aggregation
                        else m["params"]) for c, m in msgs.items()}
         sizes = {c: m["n_examples"] for c, m in msgs.items()}
         losses = {c: m["train_loss"] for c, m in msgs.items()}

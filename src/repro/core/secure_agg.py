@@ -200,6 +200,87 @@ def repair_correction(size: int, client_id: str, dropped: Sequence[str],
 
 
 # ---------------------------------------------------------------------------
+# integer-domain masking (DESIGN.md §Composable privacy)
+#
+# fp32 masks do NOT survive lossy coding: quantizing a masked buffer
+# re-rounds each endpoint's mask independently, so the telescoping sum
+# breaks. Drawing the pairwise masks over the *quantized integer* domain
+# instead — uniform residues mod M = 2**modulus_bits added to the widened
+# int stream — makes cancellation exact by construction: the server's sum
+# wraps in uint32 arithmetic, M divides 2**32, so sum_i mask_i ≡ 0 (mod M)
+# holds bit-for-bit, with zero tolerance (tests/test_composable_privacy.py).
+# The mask PRG is the same keyed lowbias32 stream as the fp32 plane, under
+# a domain-separated pair secret so the two planes never share residues.
+# ---------------------------------------------------------------------------
+INT_MASK_DOMAIN = b"/intmask"
+
+
+def mask_modulus_bits(cohort_size: int, quant_bits: int = 8) -> int:
+    """Shared mask-modulus width (16 or 32) for a masked-quantized round.
+
+    The modular sum of N clients' quantized values must decode without
+    ambiguity: each value is bounded by 2*qmax (qmax from ``quant_bits``
+    plus an equal headroom for the DP noise stage), so the signed sum
+    lives in ``[-2*N*qmax, 2*N*qmax]`` and centered decoding needs
+    ``M > 4*N*qmax``. Both endpoints derive the width from the round
+    cohort size alone, so no extra negotiation round is needed; 16-bit
+    residues halve the wire cost for typical cross-silo cohorts
+    (``M = 2**16`` covers N <= 128 at 8 bits).
+    """
+    qmax = (1 << (int(quant_bits) - 1)) - 1
+    span = 4 * max(1, int(cohort_size)) * qmax
+    return 16 if span < (1 << 16) else 32
+
+
+@partial(jax.jit, static_argnames=("size", "modulus_bits"))
+def _int_masks(keys, signs, *, size: int, modulus_bits: int):
+    """Summed signed pairwise residues mod 2**modulus_bits, as uint32.
+
+    Same unrolled one-pass structure as ``_apply_masks``: per pair, the
+    keyed lowbias32 stream masked down to ``modulus_bits`` bits, added
+    with the pair's sign in modular arithmetic (``(M - r) & (M-1)`` is
+    ``-r mod M``; uint32 wrap-around preserves residues because M divides
+    2**32). Both endpoints of a pair generate bit-identical residues, so
+    the cohort sum of all offsets is ≡ 0 (mod M) exactly.
+    """
+    maskval = jnp.uint32((1 << modulus_bits) - 1)
+    idx = jax.lax.iota(jnp.uint32, size)
+    acc = jnp.zeros((size,), jnp.uint32)
+    for p in range(keys.shape[0]):
+        bits = _mix32(_mix32(idx ^ keys[p, 0]) + keys[p, 1]) & maskval
+        neg = (jnp.uint32(0) - bits) & maskval
+        acc = acc + jnp.where(signs[p] > 0, bits, neg)
+    return acc
+
+
+def int_mask_offset(size: int, client_id: str, cohort: Sequence[str],
+                    pair_secret: bytes, modulus_bits: int):
+    """This client's total mask offset for a (size,) integer stream.
+
+    The caller adds it to the widened quantized stream and reduces mod
+    ``2**modulus_bits``; over the full cohort the offsets cancel exactly.
+    Domain-separated from the fp32 mask plane (``INT_MASK_DOMAIN``).
+    """
+    keys, signs = pair_keys(client_id, cohort,
+                            pair_secret + INT_MASK_DOMAIN)
+    if keys.shape[0] == 0:
+        return jnp.zeros((size,), jnp.uint32)
+    return _int_masks(keys, signs, size=int(size),
+                      modulus_bits=int(modulus_bits))
+
+
+def int_repair_correction(size: int, client_id: str,
+                          dropped: Sequence[str], pair_secret: bytes,
+                          modulus_bits: int):
+    """Integer-domain twin of ``repair_correction``: this survivor's
+    summed residues against the dropped peers, mod 2**modulus_bits. The
+    server subtracts it (modular) before decoding, removing exactly the
+    orphaned mask terms — bit-exact, not merely to fp32 accumulation."""
+    return int_mask_offset(size, client_id, [client_id, *dropped],
+                           pair_secret, modulus_bits)
+
+
+# ---------------------------------------------------------------------------
 # pytree-level compatibility wrappers (pack -> packed op -> unpack)
 # ---------------------------------------------------------------------------
 def mask_update(update, client_id: str, cohort: Sequence[str],

@@ -166,6 +166,23 @@ class FLServer:
             for cid in cohort:
                 self.clients.ensure_token(cid)
         self.metadata.record_run_start(run_id, job.to_dict())
+        if job.dp_epsilon > 0:
+            # the negotiated privacy budget is part of the run's audit
+            # trail from the first record: ε/δ/clip, the calibrated
+            # per-round noise, and the naive R-fold composition bound
+            # (DESIGN.md §Composable privacy)
+            from repro.core.compression import dp_sigma_total
+            self.metadata.record_provenance(
+                actor="run_manager", operation="dp_accounting",
+                subject=run_id, outcome="recorded",
+                details={"epsilon": job.dp_epsilon,
+                         "delta": job.dp_delta, "clip": job.dp_clip,
+                         "sigma_round": dp_sigma_total(
+                             job.dp_epsilon, job.dp_delta, job.dp_clip),
+                         "rounds": job.rounds,
+                         "epsilon_total_naive":
+                             job.dp_epsilon * job.rounds,
+                         "dp_seed": job.dp_seed})
         # initial global model
         model = build_model(self._arch_cfg(job))
         self._rng, sub = jax.random.split(self._rng)
@@ -342,7 +359,29 @@ class FLServer:
         cids = sorted(updates)
         ups = [updates[c] for c in cids]
         old_params = self.store.get(r.global_digest)
-        if job.secure_aggregation:
+        if job.secure_aggregation and job.compression != "none":
+            # masked-quantized plane (DESIGN.md §Composable privacy): the
+            # cohort posted integer residue streams mod 2**mbits. One
+            # modular sum (fused masked dequantize kernel; dropout
+            # corrections subtracted mod M first) cancels the pairwise
+            # masks bit-exactly, the centered residue is scaled by the
+            # cohort-common grid and — like the fp32 masked plane —
+            # divided by the survivors' total pre-scaled weight: exact
+            # weighted FedAvg over base + mean delta.
+            from repro.core import compression
+            layout = PackedLayout.for_tree(old_params)
+            corr = ([corrections[c] for c in cids]
+                    if corrections is not None else None)
+            denom = float(sum(sizes[c] for c in cids)) / float(
+                job.local_steps * job.batch_size)
+            total = compression.reduce_masked([updates[c] for c in cids],
+                                              corrections=corr)
+            mean_delta = unpack_pytree(total / np.float32(denom), layout)
+            new_global = jax.tree.map(
+                lambda p, dlt: np.asarray(p, np.float32)
+                + np.asarray(dlt, np.float32).reshape(np.shape(p)),
+                old_params, mean_delta)
+        elif job.secure_aggregation:
             # packed data plane: masked (T,) buffers -> one fused reduction
             # (dropout corrections folded in after a repair round), then a
             # single unpack into the parameter structure. Clients pre-scale
@@ -406,6 +445,9 @@ class FLServer:
         contrib = data_size_contribution(sizes)
         if job.secure_aggregation:
             contrib_norm = {}            # server never sees plain updates
+            # (masked-quantized rounds included: residue streams carry
+            # no recoverable per-client norm — contribution.py refuses
+            # them loudly rather than scoring masked noise)
         elif job.compression != "none":
             # per-client delta norms fell out of the reduction pass above
             raw = {c: comp_norms[c] * sizes[c] for c in cids}

@@ -17,6 +17,8 @@ MXU, exactly like the masked combine in ``kernels/secure_agg``.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
@@ -64,4 +66,105 @@ def dequant_reduce_flat(q, scales, weights, *, bt: int = DEFAULT_BT,
         out_shape=jax.ShapeDtypeStruct((1, tp), jnp.float32),
         interpret=interpret,
     )(q, scales.astype(jnp.float32), w)
+    return out[0, :t]
+
+
+# ---------------------------------------------------------------------------
+# masked variant (DESIGN.md §Composable privacy): modular integer sum ->
+# centered decode -> common-grid dequant, mirroring kernels/secure_agg's
+# masked_sum / masked_sum_corrected pair.
+# ---------------------------------------------------------------------------
+def _centered(s, modulus_bits: int):
+    """Modular residue -> signed value on the VPU.
+
+    ``s`` is the cohort's uint32 wrap-around sum; M = 2**modulus_bits
+    divides 2**32 so masking with M-1 yields the exact residue. For
+    M = 2**32 the centered decode is a pure two's-complement bitcast;
+    narrower moduli center by subtracting M above the half-range (the
+    residue fits int32 exactly).
+    """
+    r = s & jnp.uint32((1 << modulus_bits) - 1)
+    if modulus_bits == 32:
+        return jax.lax.bitcast_convert_type(r, jnp.int32)
+    ri = r.astype(jnp.int32)
+    return ri - jnp.where(ri >= jnp.int32(1 << (modulus_bits - 1)),
+                          jnp.int32(1 << modulus_bits), jnp.int32(0))
+
+
+def _masked_dequant_reduce_kernel(z_ref, s_ref, o_ref, *,
+                                  modulus_bits: int):
+    """z_ref: (N, BT) uint32; s_ref: (1, BT/CHUNK) f32; o_ref: (1, BT) f32.
+
+    The modular sum, residue extraction and centering run on the VPU in
+    integer arithmetic (this is where cancellation is bit-exact); only
+    the final common-grid scale touches floats.
+    """
+    n, bt = z_ref.shape
+    bc = bt // CHUNK
+    s = jnp.sum(z_ref[...], axis=0, dtype=jnp.uint32)   # wraps mod 2**32
+    c = _centered(s, modulus_bits).astype(jnp.float32)
+    o_ref[...] = (c.reshape(bc, CHUNK)
+                  * s_ref[...].reshape(bc, 1)).reshape(1, bt)
+
+
+def _masked_dequant_reduce_corr_kernel(z_ref, c_ref, s_ref, o_ref, *,
+                                       modulus_bits: int):
+    """Dropout-repair variant: subtract the survivors' summed integer
+    corrections inside the tile before the residue decode — exactly the
+    ``masked_sum_corrected`` pattern, in modular arithmetic (uint32
+    wrap-around subtraction preserves residues mod M)."""
+    n, bt = z_ref.shape
+    bc = bt // CHUNK
+    s = (jnp.sum(z_ref[...], axis=0, dtype=jnp.uint32)
+         - jnp.sum(c_ref[...], axis=0, dtype=jnp.uint32))
+    c = _centered(s, modulus_bits).astype(jnp.float32)
+    o_ref[...] = (c.reshape(bc, CHUNK)
+                  * s_ref[...].reshape(bc, 1)).reshape(1, bt)
+
+
+def masked_dequant_reduce_flat(z, scales, *, modulus_bits: int,
+                               corr=None, bt: int = DEFAULT_BT,
+                               interpret: bool = True):
+    """z: (N, T) uint masked residue streams (T a CHUNK multiple);
+    scales: (T/CHUNK,) f32 cohort-common grid; optional corr: (N, T)
+    uint repair corrections -> (T,) f32 decoded cohort *sum*.
+
+    Unlike ``dequant_reduce_flat`` there are no per-client weights: a
+    weighted modular sum would destroy mask cancellation, so weighting is
+    pre-applied client-side before quantization (the caller divides the
+    decoded sum by the cohort's total weight).
+    """
+    n, t = z.shape
+    if t % CHUNK:
+        raise ValueError(f"T={t} must be a multiple of CHUNK={CHUNK}")
+    bt = min(bt - bt % CHUNK or CHUNK, t)
+    pad = (-t) % bt
+    z = z.astype(jnp.uint32)
+    if pad:
+        z = jnp.pad(z, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, (0, pad // CHUNK))
+    if corr is not None:
+        corr = corr.astype(jnp.uint32)
+        if pad:
+            corr = jnp.pad(corr, ((0, 0), (0, pad)))
+    tp = t + pad
+    s2d = scales.astype(jnp.float32).reshape(1, tp // CHUNK)
+    row_spec = pl.BlockSpec((n, bt), lambda i: (0, i))
+    s_spec = pl.BlockSpec((1, bt // CHUNK), lambda i: (0, i))
+    if corr is None:
+        kernel = partial(_masked_dequant_reduce_kernel,
+                         modulus_bits=int(modulus_bits))
+        in_specs, operands = [row_spec, s_spec], (z, s2d)
+    else:
+        kernel = partial(_masked_dequant_reduce_corr_kernel,
+                         modulus_bits=int(modulus_bits))
+        in_specs, operands = [row_spec, row_spec, s_spec], (z, corr, s2d)
+    out = pl.pallas_call(
+        kernel,
+        grid=(tp // bt,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bt), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, tp), jnp.float32),
+        interpret=interpret,
+    )(*operands)
     return out[0, :t]

@@ -30,3 +30,29 @@ def dequant_reduce(q, scales, weights, *, interpret: bool = None):
     if interpret:
         return _ref.dequant_reduce_ref(q, scales, weights)
     return _k.dequant_reduce_flat(q, scales, weights, interpret=False)
+
+
+@partial(jax.jit, static_argnames=("modulus_bits", "interpret"))
+def masked_dequant_reduce(z, scales, *, modulus_bits: int, corr=None,
+                          interpret: bool = None):
+    """z: (N, T) uint masked residue streams (T a CHUNK multiple);
+    scales: (T/CHUNK,) f32 cohort-common grid; optional corr: (N, T)
+    uint repair corrections -> (T,) f32 decoded cohort sum.
+
+    The masked twin of ``dequant_reduce`` (DESIGN.md §Composable
+    privacy): the integer sum wraps mod 2**modulus_bits so pairwise
+    masks cancel bit-exactly before the centered decode and the
+    common-grid dequant. No per-client weights — weighting is
+    pre-applied client-side, exactly like the packed fp32 secure plane.
+    On TPU this is the fused Pallas combine; interpret mode falls back
+    to the jnp oracle it is parity-tested against
+    (tests/test_composable_privacy.py).
+    """
+    if interpret is None:
+        interpret = kernels.INTERPRET
+    if interpret:
+        return _ref.masked_dequant_reduce_ref(z, scales, modulus_bits,
+                                              corr=corr)
+    return _k.masked_dequant_reduce_flat(z, scales,
+                                         modulus_bits=modulus_bits,
+                                         corr=corr, interpret=False)

@@ -220,14 +220,21 @@ def test_job_matrix_accepts_supported_combinations():
              "compression_ratio": 0.05},
             {"secure_aggregation": False, "compression": "int8",
              "protocol": "async_buff"},
+            # composable privacy: integer-domain masks compose with int8
+            {"secure_aggregation": True, "compression": "int8"},
+            {"secure_aggregation": True, "compression": "int8",
+             "dp_epsilon": 8.0},
+            {"secure_aggregation": False, "compression": "int8",
+             "dp_epsilon": 4.0, "dp_clip": 0.5},
             {"secure_aggregation": True, "compression": "none"}):
         job = make_job(**extra)
         assert job.compression == extra["compression"]
 
 
 def test_job_matrix_rejects_unsupported_combinations():
+    # secure+topk stays rejected: the index set leaks the update support
     with pytest.raises(ValueError, match="secure_aggregation"):
-        make_job(secure_aggregation=True, compression="int8")
+        make_job(secure_aggregation=True, compression="topk")
     with pytest.raises(ValueError, match="aggregation"):
         make_job(secure_aggregation=False, compression="topk",
                  aggregation="median")
@@ -239,6 +246,19 @@ def test_job_matrix_rejects_unsupported_combinations():
     with pytest.raises(ValueError, match="quant_bits"):
         make_job(secure_aggregation=False, compression="int8",
                  quant_bits=16)
+    # the DP noise stage rides the quantized integer plane, synchronously
+    with pytest.raises(ValueError, match="dp_epsilon"):
+        make_job(secure_aggregation=False, compression="topk",
+                 dp_epsilon=8.0)
+    with pytest.raises(ValueError, match="dp_epsilon"):
+        make_job(secure_aggregation=False, compression="int8",
+                 protocol="async_buff", dp_epsilon=8.0)
+    with pytest.raises(ValueError, match="dp_delta"):
+        make_job(secure_aggregation=True, compression="int8",
+                 dp_epsilon=8.0, dp_delta=1.5)
+    with pytest.raises(ValueError, match="dp_clip"):
+        make_job(secure_aggregation=True, compression="int8",
+                 dp_epsilon=8.0, dp_clip=0.0)
 
 
 def test_compression_is_a_negotiable_default_decision():

@@ -145,11 +145,16 @@ def test_outer_state_resets_on_hp_restart():
 
     def spy(updates, sizes, losses, corrections=None):
         orig(updates, sizes, losses, corrections=corrections)
-        seen.append((con.server.run.hp_index, id(con.server.run.outer)))
+        # keep a strong reference alongside the id: a freed trial-0
+        # optimizer's address can be REUSED by trial 1's fresh object,
+        # making distinct objects compare equal by id alone
+        seen.append((con.server.run.hp_index, id(con.server.run.outer),
+                     con.server.run.outer))
 
     con.server._aggregate_and_advance = spy
     assert con.run_to_completion() == "done"
-    by_trial = {hp: {o for h, o in seen if h == hp} for hp, _ in seen}
+    by_trial = {hp: {o for h, o, _ in seen if h == hp}
+                for hp, _, _ in seen}
     assert set(by_trial) == {0, 1}
     assert all(len(v) == 1 for v in by_trial.values())  # stable per trial
     assert by_trial[0] != by_trial[1]                   # fresh per restart
