@@ -36,15 +36,25 @@ import numpy as np
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
+# Must land before the first jax import (pulled in lazily by repro.core):
+# the many-silo sweep runs hundreds of tiny jit programs on host — a few
+# forced host devices keep XLA's per-program autotuning cheap.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
 
 ARCH = "fedforecast-100m"
 
 
-def build_fleet(n_silos, capacity, *, event_driven=True, staggered=True):
-    from repro.core import FederationScheduler
+def build_fleet(n_silos, capacity, *, event_driven=True, staggered=True,
+                transport="inproc", wan_seed=None):
+    """Returns ``(scheduler, client_ids, closer)``; ``closer()`` tears
+    down the transport (the socket backend runs a board subprocess)."""
+    from repro.core import FederationScheduler, WanModel, make_transport
     from repro.data.synthetic import SiloDataset
+    wan = WanModel(seed=wan_seed) if wan_seed is not None else None
+    t, closer = make_transport(transport, wan=wan)
     sched = FederationScheduler(b"bench-key".ljust(32, b"0"),
-                                event_driven=event_driven)
+                                event_driven=event_driven, transport=t)
     cids = []
     for i in range(n_silos):
         # real silos poll on their own cadence; stagger 1/2/4 passes so
@@ -53,11 +63,15 @@ def build_fleet(n_silos, capacity, *, event_driven=True, staggered=True):
         cids.append(sched.bootstrap_silo(
             f"org{i:02d}", SiloDataset(f"default-{i}", 512, 32, i),
             capacity=capacity, tick_every=tick_every))
-    return sched, cids
+    return sched, cids, closer
 
 
-def submit_jobs(sched, cids, n_jobs, *, rounds):
-    """Deterministic job stream: seed j everywhere, per-(job, silo) data."""
+def submit_jobs(sched, cids, n_jobs, *, rounds, cohort_size=None):
+    """Deterministic job stream: seed j everywhere, per-(job, silo) data.
+
+    ``cohort_size``: each job runs over a deterministic slice of the
+    fleet (job j gets silos ``(j*size + k) % n_silos``) instead of every
+    silo — the many-silo sweep shape, where 32 jobs share 100 silos."""
     from repro.core.jobs import JobCreator
     from repro.data.synthetic import SiloDataset
     jc = JobCreator(sched.metadata)
@@ -67,10 +81,15 @@ def submit_jobs(sched, cids, n_jobs, *, rounds):
             "arch": ARCH, "rounds": rounds, "local_steps": 1,
             "batch_size": 2, "lr": 1e-3, "data_schema": None,
             "secure_aggregation": True, "gc_round_resources": True})
+        if cohort_size is None:
+            cohort = list(cids)
+        else:
+            cohort = [cids[(j * cohort_size + k) % len(cids)]
+                      for k in range(cohort_size)]
         datasets = {cid: SiloDataset(f"j{j}-s{i}", 512, 32, 9000 + j * 64 + i)
-                    for i, cid in enumerate(cids)}
+                    for i, cid in enumerate(cohort)}
         runs.append(sched.submit(job, server=sched.new_server(seed=j),
-                                 datasets=datasets))
+                                 cohort=cohort, datasets=datasets))
     return runs
 
 
@@ -92,10 +111,12 @@ def max_abs_err(a, b):
                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
 
 
-def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True):
+def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True,
+                      transport="inproc", wan_seed=None):
     """One concurrency level: concurrent vs sequential vs naive ticking."""
     # concurrent fleet: capacity = n_jobs so every job is co-resident
-    sched, cids = build_fleet(n_silos, capacity=n_jobs)
+    sched, cids, close = build_fleet(n_silos, capacity=n_jobs,
+                                     transport=transport, wan_seed=wan_seed)
     runs = submit_jobs(sched, cids, n_jobs, rounds=rounds)
     passes, wall = drain(sched)
     rounds_total = sum(len(sched.entries[r].server.run.history)
@@ -105,6 +126,7 @@ def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True):
     admits = sched.metadata.query(kind="provenance", operation="admit_job")
     out = {
         "jobs": n_jobs,
+        "transport": transport,
         "passes": passes,
         "wall_s": wall,
         "server_ticks": sched.stats["server_ticks"],
@@ -112,11 +134,21 @@ def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True):
         "rounds_completed": rounds_total,
         "rounds_per_pass": rounds_total / passes,
         "board_bytes_posted": sched.board.stats["bytes_posted"],
+        "board_bytes_fetched": sched.board.stats["bytes_fetched"],
+        "stat_calls": sched.board.stats["stat_calls"],
+        "stat_probes": sched.board.stats["stat_probes"],
+        "probes_saved": sched.board.stats["probes_saved"],
         "admission_decisions_on_chain": len(admits),
     }
+    if sched.board.wan is not None:
+        out["sim_wan_s"] = sched.board.wan.elapsed()
+        out["wan_charges"] = sched.board.wan.charges
 
-    # sequential baseline: capacity-1 fleet serializes the same jobs
-    seq, seq_cids = build_fleet(n_silos, capacity=1)
+    # sequential baseline: capacity-1 fleet serializes the same jobs.
+    # Baselines stay on the in-proc dict: they exist to isolate schedule
+    # effects, and twin equivalence across transports is proven by
+    # tests/test_transport.py.
+    seq, seq_cids, close_seq = build_fleet(n_silos, capacity=1)
     seq_runs = submit_jobs(seq, seq_cids, n_jobs, rounds=rounds)
     seq_passes, seq_wall = drain(seq)
     assert all(seq.entries[r].state == "done" for r in seq_runs)
@@ -126,8 +158,8 @@ def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True):
         out["rounds_per_pass"] / out["sequential"]["rounds_per_pass"])
 
     # naive round-robin ticking: same concurrency, no wake conditions
-    naive, naive_cids = build_fleet(n_silos, capacity=n_jobs,
-                                    event_driven=False)
+    naive, naive_cids, close_naive = build_fleet(n_silos, capacity=n_jobs,
+                                                 event_driven=False)
     naive_runs = submit_jobs(naive, naive_cids, n_jobs, rounds=rounds)
     naive_passes, naive_wall = drain(naive)
     assert all(naive.entries[r].state == "done" for r in naive_runs)
@@ -145,11 +177,59 @@ def bench_concurrency(n_jobs, n_silos, rounds, *, twin_check=True):
         out["twin_max_abs_err"] = max(errs)
         assert out["twin_max_abs_err"] <= 1e-4, \
             f"concurrent aggregates diverged from twins: {errs}"
+    for c in (close, close_seq, close_naive):
+        c()
+    return out
+
+
+def bench_many_silos(*, n_silos=100, n_jobs=32, cohort_size=8, capacity=4,
+                     rounds=1, transport="inproc", wan_seed=None):
+    """The heavy-traffic shape from the ROADMAP: 100 silos, 32 concurrent
+    jobs, each over its own deterministic 8-silo cohort. The board sees
+    every run's probes at once — this sweep is what the batched
+    ``stat_many`` hot paths and the indexed ``list`` exist for, and the
+    report carries the proof: ``stat_probes`` is what per-path probing
+    would have cost in transport round trips, ``stat_calls`` is what the
+    batched sweeps actually paid."""
+    sched, cids, close = build_fleet(n_silos, capacity=capacity,
+                                     transport=transport, wan_seed=wan_seed)
+    runs = submit_jobs(sched, cids, n_jobs, rounds=rounds,
+                       cohort_size=cohort_size)
+    passes, wall = drain(sched, max_passes=500_000)
+    assert all(sched.entries[r].state == "done" for r in runs)
+    stats = sched.board.stats
+    out = {
+        "n_silos": n_silos, "jobs": n_jobs, "cohort_size": cohort_size,
+        "capacity": capacity, "rounds_per_job": rounds,
+        "transport": transport,
+        "passes": passes,
+        "wall_s": wall,
+        "passes_per_sec": passes / wall,
+        "server_ticks": sched.stats["server_ticks"],
+        "idle_skips": sched.stats["idle_skips"],
+        "probes": {
+            "stat_calls_batched": stats["stat_calls"],
+            "stat_probes_per_path_equivalent": stats["stat_probes"],
+            "probes_saved": stats["probes_saved"],
+            "batching_x": (stats["stat_probes"] /
+                           max(1, stats["stat_calls"])),
+        },
+        "board_bytes_posted": stats["bytes_posted"],
+        "board_bytes_fetched": stats["bytes_fetched"],
+    }
+    t = sched.board.transport
+    if hasattr(t, "list_index_hits"):
+        out["list_index_hits"] = t.list_index_hits
+        out["list_full_scans"] = t.list_full_scans
+    if sched.board.wan is not None:
+        out["sim_wan_s"] = sched.board.wan.elapsed()
+        out["wan_charges"] = sched.board.wan.charges
+    close()
     return out
 
 
 def run_bench(*, job_counts=(1, 4, 16), n_silos=8, rounds=2,
-              write_json=True):
+              write_json=True, many_silos=True):
     report = {"n_silos": n_silos, "rounds_per_job": rounds,
               "unit_note": ("passes = scheduler poll cycles, the latency "
                             "unit of a pull-based deployment; wall_s is "
@@ -165,6 +245,16 @@ def run_bench(*, job_counts=(1, 4, 16), n_silos=8, rounds=2,
               f"idle_skips={level['idle_skips']} "
               f"ticks_saved={level['ticks_saved_vs_naive']:.0%} "
               f"twin_err={level.get('twin_max_abs_err', 0):.1e}")
+    if many_silos:
+        sweep = bench_many_silos()
+        report["many_silos"] = sweep
+        pr = sweep["probes"]
+        print(f"many-silos sweep: {sweep['n_silos']} silos x "
+              f"{sweep['jobs']} jobs  passes={sweep['passes']} "
+              f"({sweep['passes_per_sec']:.1f}/s)  "
+              f"probes {pr['stat_probes_per_path_equivalent']} -> "
+              f"{pr['stat_calls_batched']} calls "
+              f"({pr['batching_x']:.1f}x batched)")
     if write_json:
         path = os.path.join(_REPO_ROOT, "BENCH_multi_job.json")
         with open(path, "w") as f:
@@ -173,14 +263,29 @@ def run_bench(*, job_counts=(1, 4, 16), n_silos=8, rounds=2,
     return report
 
 
-def run_smoke():
-    """Tiny pass for CI: 1 and 2 concurrent jobs over 2 silos, 1 round,
-    twin check included — exercises admission, the event loop, both
-    baselines and the report assembly in seconds."""
-    report = run_bench(job_counts=(1, 2), n_silos=2, rounds=1,
-                       write_json=False)
+def run_smoke(*, transport="inproc", wan=False):
+    """Tiny pass for CI: 2 concurrent jobs over 2 silos, 1 round, twin
+    check included — exercises admission, the event loop, both baselines
+    and the report assembly in seconds. ``transport="socket"`` runs it
+    against a board-hosting subprocess; ``wan=True`` attaches the WAN
+    cost model and asserts simulated time accrues."""
+    report = run_bench(job_counts=(2,), n_silos=2, rounds=1,
+                       write_json=False, many_silos=False)
     for level in report["levels"].values():
         assert level["twin_max_abs_err"] <= 1e-4
+    if transport != "inproc" or wan:
+        level = bench_concurrency(2, 2, 1, transport=transport,
+                                  wan_seed=0 if wan else None,
+                                  twin_check=False)
+        if wan:
+            assert level["sim_wan_s"] > 0, "WAN model charged nothing"
+            print(f"wan smoke: sim_wan_s={level['sim_wan_s']:.2f} "
+                  f"({level['wan_charges']} charges)")
+        if transport != "inproc":
+            print(f"transport smoke ({transport}): "
+                  f"passes={level['passes']} "
+                  f"stat_calls={level['stat_calls']} "
+                  f"probes_saved={level['probes_saved']}")
     return report
 
 
@@ -188,8 +293,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-shape smoke pass (no JSON written)")
+    ap.add_argument("--transport", default="inproc",
+                    choices=("inproc", "socket"),
+                    help="board backend for the smoke variant")
+    ap.add_argument("--wan", action="store_true",
+                    help="attach the deterministic WAN cost model "
+                         "(smoke) and report simulated wall-clock")
     args = ap.parse_args()
     if args.smoke:
-        run_smoke()
+        run_smoke(transport=args.transport, wan=args.wan)
     else:
         run_bench()

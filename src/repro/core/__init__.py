@@ -31,5 +31,8 @@ from repro.core.scheduler import (FederationScheduler,
                                   JobEntry)  # noqa: F401
 from repro.core.server import FLServer, ModelStore  # noqa: F401
 from repro.core.simulation import Consortium  # noqa: F401
+from repro.core.transport import (InProcTransport, SocketTransport,
+                                  SocketTransportServer, Transport, WanModel,
+                                  make_transport)  # noqa: F401
 from repro.core.validation import (DataSchema, ValidationResult,
                                    validate_stats)  # noqa: F401

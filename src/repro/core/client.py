@@ -175,8 +175,11 @@ class FLClientNode:
                 subject=self.run_id, outcome="posted")
             return "stats_posted"
 
-        status = self.comm.fetch(f"runs/{self.run_id}/status",
-                                 broadcast=True)
+        # conditional fetch: status is polled every tick but changes at
+        # most once per round — unchanged ticks cost a metadata round
+        # trip, not a re-download + decrypt
+        status = self.comm.fetch_cached(f"runs/{self.run_id}/status",
+                                        broadcast=True)
         if status is None:
             return "waiting_status"
         attempt = status.get("attempt", 0)
@@ -352,7 +355,10 @@ class FLClientNode:
         updates are down-weighted, nobody stalls anybody)."""
         rnd, hp = status["round"], status["hp_index"]
         base = f"runs/{self.run_id}/round/{hp}/{rnd}"
-        msg = self.comm.fetch(f"{base}/global", broadcast=True)
+        # an async silo contributes several updates against one commit's
+        # global — conditional fetch re-downloads it only when the server
+        # actually committed a new one
+        msg = self.comm.fetch_cached(f"{base}/global", broadcast=True)
         if msg is None:
             return "waiting_global"
         base_params = jax.tree.map(jnp.asarray, msg["params"])

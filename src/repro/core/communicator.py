@@ -14,37 +14,39 @@ clients can verify (§VII Server Authentication).
 """
 from __future__ import annotations
 
-import fnmatch
 import time
 from collections import OrderedDict
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import crypto, serialization
 from repro.core.clients import ClientManagement
 from repro.core.metadata import MetadataStore
+from repro.core.transport import (InProcTransport, Resource, Transport,
+                                  WanModel)
 
-
-@dataclass
-class Resource:
-    path: str
-    blob: bytes                  # encrypted payload
-    author: str                  # "server" or client_id
-    created_at: float = field(default_factory=time.time)
-    version: int = 1             # bumps on overwrite — monotonic, no clock
-    seq: int = 0                 # board-wide mutation counter at last write
+__all__ = ["Resource", "MessageBoard", "ServerCommunicator",
+           "ClientCommunicator"]
 
 
 class MessageBoard:
-    """The shared transport substrate (in-process stand-in for the REST API).
+    """Policy shell over a pluggable :class:`Transport` backend.
 
-    The board itself stores only ciphertext; it can be hosted by the
-    (semi-trusted) coordinator without seeing plaintext updates. Every write
-    stamps the resource with a board-wide monotonic mutation counter
-    (``seq``) — the federation scheduler's wake conditions compare it
-    against a snapshot to tell "something this run waits for changed"
-    without decrypting anything (``latest_seq``). Runs never collide on the
-    board because every run's resources live under its own
+    The board used to *be* the storage (one dict, one class); it is now
+    split in two layers (DESIGN.md §Transport layer): the transport
+    stores ciphertext + resource metadata and owns the board-wide
+    monotonic mutation counter (``seq``), while this shell keeps
+    everything the paper assigns to the coordinator's trust boundary —
+    token validation against Client Management, rejected-post
+    provenance, deletion tombstones and traffic accounting. Swap the
+    backend (``InProcTransport`` dict vs. ``SocketTransport`` to a
+    board-hosting process) and the shell behaves identically.
+
+    The board stores only ciphertext; it can be hosted by the
+    (semi-trusted) coordinator without seeing plaintext updates. The
+    federation scheduler's wake conditions compare ``seq`` against a
+    snapshot to tell "something this run waits for changed" without
+    decrypting anything (``latest_seq``). Runs never collide on the
+    board because every run's resources live under their own
     ``runs/<run_id>/...`` namespace.
     """
 
@@ -56,26 +58,53 @@ class MessageBoard:
     # eviction, never a lost wake.
     TOMBSTONE_CAP = 4096
 
-    def __init__(self, clients: ClientManagement, metadata: MetadataStore):
+    def __init__(self, clients: ClientManagement, metadata: MetadataStore,
+                 transport: Optional[Transport] = None,
+                 wan: Optional[WanModel] = None):
         self.clients = clients
         self.metadata = metadata
-        self._resources: Dict[str, Resource] = {}
+        self.transport = (transport if transport is not None
+                          else InProcTransport(wan=wan))
         self._tombstones: "OrderedDict[str, int]" = OrderedDict()
         self._tombstone_floor = 0         # max seq among evicted tombstones
-        self.seq = 0                      # monotonic board mutation counter
+        # bytes_posted counts the upload side, bytes_fetched the download
+        # side (both directions cross the WAN in deployment — the cost
+        # model needs both); the *_by maps break traffic down per actor.
+        # stat_calls/stat_probes/probes_saved account the batched probe
+        # sweeps: one stat_many over k paths is 1 call, k probes, k-1
+        # saved round-trips vs. per-path stat.
         self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
-                      "bytes_posted_clients": 0, "rejected": 0,
-                      "deletes": 0}
+                      "bytes_posted_clients": 0, "bytes_fetched": 0,
+                      "rejected": 0, "deletes": 0,
+                      "stat_calls": 0, "stat_probes": 0, "probes_saved": 0,
+                      "bytes_posted_by": {}, "bytes_fetched_by": {}}
+
+    @property
+    def seq(self) -> int:
+        """Board-wide monotonic mutation counter (owned by the transport)."""
+        return self.transport.seq
+
+    @property
+    def wan(self) -> Optional[WanModel]:
+        return self.transport.wan
+
+    def close(self):
+        self.transport.close()
+
+    def _account_fetch(self, reader: str, nbytes: Optional[int]):
+        self.stats["fetches"] += 1
+        if nbytes:
+            self.stats["bytes_fetched"] += nbytes
+            by = self.stats["bytes_fetched_by"]
+            by[reader] = by.get(reader, 0) + nbytes
 
     def _put(self, path: str, blob: bytes, author: str):
-        prev = self._resources.get(path)
-        self.seq += 1
         self._tombstones.pop(path, None)   # a re-created path is live again
-        self._resources[path] = Resource(
-            path, blob, author, version=prev.version + 1 if prev else 1,
-            seq=self.seq)
+        self.transport.put(path, blob, author)
         self.stats["posts"] += 1
         self.stats["bytes_posted"] += len(blob)
+        by = self.stats["bytes_posted_by"]
+        by[author] = by.get(author, 0) + len(blob)
         if author != "server":
             # silo-uploaded bytes: the WAN cost the compressed data plane
             # exists to shrink (bench_compression reports this counter)
@@ -94,51 +123,72 @@ class MessageBoard:
             raise PermissionError(f"invalid token for {client_id}")
         self._put(path, blob, client_id)
 
-    def get(self, path: str) -> Optional[bytes]:
-        self.stats["fetches"] += 1
-        r = self._resources.get(path)
-        return r.blob if r else None
+    def get(self, path: str, *, reader: str = "server") -> Optional[bytes]:
+        blob = self.transport.get(path, reader=reader)
+        self._account_fetch(reader, len(blob) if blob is not None else None)
+        return blob
+
+    def get_if_newer(self, path: str, version: int, *,
+                     reader: str = "server") -> Tuple[Optional[bytes], int]:
+        """Conditional fetch (HTTP ETag shape): ``(blob, version)`` when
+        the stored resource is newer than ``version``, else
+        ``(None, stored_version)`` — the unchanged case costs a
+        metadata-only round trip, not a re-download (client pollers hit
+        ``runs/<rid>/status`` every tick; it rarely changes)."""
+        blob, ver = self.transport.get_if_newer(path, version, reader=reader)
+        self._account_fetch(reader, len(blob) if blob is not None else None)
+        return blob, ver
 
     def stat(self, path: str) -> Optional[dict]:
         """Resource metadata without touching the ciphertext — used by the
         server's heartbeat probes (``collect_heartbeats``): the coordinator
         can see *that* a client posted and when, never *what*."""
-        r = self._resources.get(path)
-        if r is None:
-            return None
-        return {"author": r.author, "created_at": r.created_at,
-                "version": r.version, "bytes": len(r.blob)}
+        self.stats["stat_calls"] += 1
+        self.stats["stat_probes"] += 1
+        return self.transport.stat(path)
+
+    def stat_many(self, paths) -> Dict[str, Optional[dict]]:
+        """Batched ``stat`` over a whole cohort: ONE transport call (one
+        RPC round trip on the socket backend) instead of one per path —
+        ``probes_saved`` counts the difference."""
+        paths = list(paths)
+        if not paths:
+            return {}
+        self.stats["stat_calls"] += 1
+        self.stats["stat_probes"] += len(paths)
+        self.stats["probes_saved"] += len(paths) - 1
+        return self.transport.stat_many(paths)
 
     def latest_seq(self, paths) -> int:
         """Largest mutation counter among ``paths`` (0 if none were ever
         written).
 
-        Metadata-only, like ``stat``: lets a scheduler ask "did anything
-        this run is waiting for appear/change since snapshot S?" in O(len
-        (paths)) dict lookups, with no decryption and no polling of the
-        payloads themselves. A deleted path counts with the seq of its
-        *deletion* (per-path tombstone): a wake snapshot taken before a
-        round GC must observe that the resource changed, or the watcher
-        would sleep on a path that no longer exists. Paths whose tombstone
-        was LRU-evicted report the eviction floor — at worst one spurious
+        Metadata-only, like ``stat``: one batched transport sweep answers
+        "did anything this run is waiting for appear/change since
+        snapshot S?" with no decryption and no polling of the payloads
+        themselves. A deleted path counts with the seq of its *deletion*
+        (per-path tombstone, kept board-side — the transport forgets
+        deleted paths entirely): a wake snapshot taken before a round GC
+        must observe that the resource changed, or the watcher would
+        sleep on a path that no longer exists. Paths whose tombstone was
+        LRU-evicted report the eviction floor — at worst one spurious
         wake for a very stale watcher, never a missed one."""
+        paths = list(paths)
+        if not paths:
+            return 0
         latest = 0
-        for path in paths:
-            r = self._resources.get(path)
-            seq = (r.seq if r is not None
+        for path, meta in self.transport.stat_many(paths).items():
+            seq = (meta["seq"] if meta is not None
                    else self._tombstones.get(path, self._tombstone_floor))
             if seq > latest:
                 latest = seq
         return latest
 
     def list(self, pattern: str) -> List[str]:
-        # fnmatchcase, not fnmatch: fnmatch case-folds both sides via
-        # os.path.normcase, so on macOS/Windows hosts "update/OrgA" would
-        # match a pattern written for "update/orga". Resource paths embed
-        # case-sensitive client ids — matching must be byte-exact on
-        # every platform.
-        return sorted(p for p in self._resources
-                      if fnmatch.fnmatchcase(p, pattern))
+        # Glob matching is fnmatchcase (byte-exact on every platform) —
+        # the transport contract; InProcTransport answers from a
+        # directory-prefix index, same observable semantics.
+        return self.transport.list(pattern)
 
     def delete(self, path: str):
         """Remove a resource, leaving a per-path trace: the deletion bumps
@@ -146,9 +196,9 @@ class MessageBoard:
         ``latest_seq`` watchers observe deletions exactly like overwrites
         (round GC must not let wake snapshots go stale). The tombstone map
         is bounded (``TOMBSTONE_CAP``): evictions fold into the floor."""
-        if self._resources.pop(path, None) is not None:
-            self.seq += 1
-            self._tombstones[path] = self.seq
+        seq = self.transport.delete(path)
+        if seq is not None:
+            self._tombstones[path] = seq
             self._tombstones.move_to_end(path)
             while len(self._tombstones) > self.TOMBSTONE_CAP:
                 _, evicted = self._tombstones.popitem(last=False)
@@ -191,19 +241,20 @@ class ServerCommunicator:
 
     def collect_heartbeats(self, run_id: str, cohort) -> Dict[str, int]:
         """Liveness view: client_id -> overwrite version of the latest
-        heartbeat (missing clients are absent). Uses ``board.stat`` —
-        resource metadata only, no decryption: the coordinator sees *that*
-        a client refreshed its heartbeat, never *what* it contains. The
+        heartbeat (missing clients are absent). One ``board.stat_many``
+        sweep over the whole cohort — resource metadata only, no
+        decryption: the coordinator sees *that* a client refreshed its
+        heartbeat, never *what* it contains, and pays one transport
+        round trip per tick instead of one per cohort member. The
         version is a monotonic overwrite counter, so liveness never
         depends on clock resolution. Heartbeats ride the same pull-based
         board as every other resource — the server never probes clients
         directly (requirement 6)."""
-        out: Dict[str, int] = {}
-        for cid in cohort:
-            meta = self.board.stat(f"runs/{run_id}/heartbeat/{cid}")
-            if meta is not None:
-                out[cid] = int(meta["version"])
-        return out
+        cohort = list(cohort)
+        paths = {cid: f"runs/{run_id}/heartbeat/{cid}" for cid in cohort}
+        metas = self.board.stat_many(paths.values())
+        return {cid: int(metas[p]["version"])
+                for cid, p in paths.items() if metas[p] is not None}
 
 
 class ClientCommunicator:
@@ -218,11 +269,43 @@ class ClientCommunicator:
         self.channel_key = channel_key
         self.broadcast_key = broadcast_key
         self.ca_key = ca_key
+        # path -> (seen version, decrypted payload) for fetch_cached;
+        # small FIFO — clients only ever poll a handful of hot paths
+        self._fetch_cache: Dict[str, tuple] = {}
+
+    FETCH_CACHE_CAP = 8
 
     def fetch(self, path: str, *, broadcast: bool = False):
-        blob = self.board.get(path)
+        blob = self.board.get(path, reader=self.client_id)
         if blob is None:
             return None
+        return self._open(blob, broadcast=broadcast)
+
+    def fetch_cached(self, path: str, *, broadcast: bool = False):
+        """Conditional fetch: re-download only when the resource's
+        overwrite version moved past what this client last saw (HTTP
+        ETag / If-None-Match shape). Clients poll ``runs/<rid>/status``
+        and the async global every tick; those resources change once
+        per round at most, so the unchanged ticks collapse to a
+        metadata-only round trip and the cached plaintext is reused."""
+        seen_version, cached = self._fetch_cache.get(path, (0, None))
+        blob, version = self.board.get_if_newer(path, seen_version,
+                                                reader=self.client_id)
+        if blob is None:
+            if version == 0:               # resource gone (or never there)
+                self._fetch_cache.pop(path, None)
+                return None
+            if version < seen_version:     # deleted + re-published: refetch
+                self._fetch_cache.pop(path, None)
+                return self.fetch_cached(path, broadcast=broadcast)
+            return cached                  # 304: unchanged since last look
+        payload = self._open(blob, broadcast=broadcast)
+        self._fetch_cache[path] = (version, payload)
+        while len(self._fetch_cache) > self.FETCH_CACHE_CAP:
+            self._fetch_cache.pop(next(iter(self._fetch_cache)))
+        return payload
+
+    def _open(self, blob: bytes, *, broadcast: bool):
         key = self.broadcast_key if broadcast else self.channel_key
         body = serialization.unpack(crypto.decrypt(key, blob))
         # server authentication (§VII): verify certificate before trusting

@@ -100,7 +100,10 @@ class Phase:
         paths = self.wait_paths(server)
         if paths is None:
             return WakeCondition(poll=True)
-        missing = [p for p in paths if server.board.stat(p) is None]
+        # one batched sweep over the whole wait-set (single transport
+        # round trip), not a stat per path per tick
+        metas = server.board.stat_many(paths)
+        missing = [p for p in paths if metas[p] is None]
         if not missing:
             return WakeCondition(poll=True)      # everything arrived
         return WakeCondition(paths=tuple(missing))
@@ -543,9 +546,15 @@ class AsyncServePhase(Phase):
     def poll(self, server):
         r = server.run
         st = r.proto
+        # overwrite detection across the whole cohort in one batched
+        # metadata sweep — the async server polls every tick, so this is
+        # the hottest probe path in the buffered protocol
+        paths = {cid: f"runs/{r.run_id}/async/update/{cid}"
+                 for cid in r.cohort}
+        metas = server.board.stat_many(paths.values())
         for cid in r.cohort:
-            path = f"runs/{r.run_id}/async/update/{cid}"
-            meta = server.board.stat(path)
+            path = paths[cid]
+            meta = metas[path]
             if meta is None or meta["version"] <= st["seen"].get(cid, 0):
                 continue
             msg = server.comm.collect(path, cid)

@@ -77,6 +77,7 @@ class FederationScheduler:
                  metadata: Optional[MetadataStore] = None,
                  clients: Optional[ClientManagement] = None,
                  board: Optional[MessageBoard] = None,
+                 transport=None, wan=None,
                  event_driven: bool = True, patience: int = 32,
                  preemptive: bool = False, server_id: str = "fl-server"):
         self.master_key = master_key or secrets.token_bytes(32)
@@ -84,7 +85,10 @@ class FederationScheduler:
         self.metadata = MetadataStore() if metadata is None else metadata
         self.clients = (ClientManagement(self.metadata) if clients is None
                         else clients)
-        self.board = (MessageBoard(self.clients, self.metadata)
+        # transport/wan: storage backend + WAN cost model for the board
+        # this scheduler builds; ignored when a prebuilt board is passed
+        self.board = (MessageBoard(self.clients, self.metadata,
+                                   transport=transport, wan=wan)
                       if board is None else board)
         self.comm = ServerCommunicator(self.board, self.master_key, server_id)
         self.pair_secret = self.master_key + b"/pairwise"

@@ -331,7 +331,8 @@ class FLServer:
     def _poll_cohort(self, path_for, waiting_for: str) -> Optional[Dict]:
         """One poll cycle over a per-client resource, with the deadline.
 
-        Probes presence via ``board.stat`` only — posted payloads are NOT
+        Probes presence via one batched ``board.stat_many`` sweep (a
+        single transport round trip per tick) — posted payloads are NOT
         decrypted while stragglers are outstanding (a masked update is
         tens of MB; decrypting the whole cohort on every poll tick would
         dwarf the actual aggregation). Enforces the phase deadline on the
@@ -340,8 +341,8 @@ class FLServer:
         ``None`` (still waiting, or the run just paused).
         """
         r = self.run
-        missing = [cid for cid in r.cohort
-                   if self.board.stat(path_for(cid)) is None]
+        metas = self.board.stat_many([path_for(cid) for cid in r.cohort])
+        missing = [cid for cid in r.cohort if metas[path_for(cid)] is None]
         if missing:
             self._enforce_deadline(missing, waiting_for)
             if r.phase == "paused":

@@ -22,11 +22,16 @@ from repro.core.scheduler import FederationScheduler
 class Consortium:
     def __init__(self, organizations: List[str], *, seed: int = 0,
                  master_key: Optional[bytes] = None,
-                 metadata_path: Optional[str] = None):
+                 metadata_path: Optional[str] = None,
+                 transport=None, wan=None):
         self.master_key = master_key or secrets.token_bytes(32)
         metadata = MetadataStore(path=metadata_path) if metadata_path else None
+        # transport/wan plumb straight through to the MessageBoard: the
+        # same consortium runs over the in-proc dict or a board-hosting
+        # subprocess (tests/test_transport.py proves twin equivalence)
         self.scheduler = FederationScheduler(self.master_key,
-                                             metadata=metadata)
+                                             metadata=metadata,
+                                             transport=transport, wan=wan)
         self.server = self.scheduler.new_server(seed=seed)
         self.organizations = organizations
         self.admin = "server-admin"

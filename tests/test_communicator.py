@@ -176,3 +176,30 @@ def test_board_stores_only_ciphertext():
     client.post("runs/r/update/c", secret)
     raw = board.get("runs/r/update/c")
     assert b"secret_value" not in raw         # opaque to the coordinator
+
+
+def test_fetch_cached_conditional_roundtrip():
+    """ETag-style polling: the second fetch of an unchanged resource is a
+    metadata round trip (no bytes re-downloaded), an overwrite triggers a
+    re-fetch, and delete + re-publish is never served stale."""
+    board, server, client, cid, token = make_stack()
+    server.publish("runs/r/status", {"phase": "collect", "round": 0})
+    assert client.fetch_cached("runs/r/status",
+                               broadcast=True)["round"] == 0
+    fetched = board.stats["bytes_fetched"]
+    # unchanged: answered from cache, zero payload bytes moved
+    assert client.fetch_cached("runs/r/status",
+                               broadcast=True)["round"] == 0
+    assert board.stats["bytes_fetched"] == fetched
+    # overwrite bumps the version: next poll re-downloads
+    server.publish("runs/r/status", {"phase": "collect", "round": 1})
+    assert client.fetch_cached("runs/r/status",
+                               broadcast=True)["round"] == 1
+    assert board.stats["bytes_fetched"] > fetched
+    # deletion: the cache must not resurrect the dead resource
+    board.delete("runs/r/status")
+    assert client.fetch_cached("runs/r/status", broadcast=True) is None
+    # re-publish after delete restarts versions at 1 — still not stale
+    server.publish("runs/r/status", {"phase": "evaluate", "round": 1})
+    assert client.fetch_cached(
+        "runs/r/status", broadcast=True)["phase"] == "evaluate"

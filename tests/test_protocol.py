@@ -166,12 +166,19 @@ def test_wake_condition_derived_from_phase_declarations():
     board = server.board
     probed = []
     orig_stat = board.stat
+    orig_stat_many = board.stat_many
 
     def spying_stat(path):
         probed.append(path)
         return orig_stat(path)
 
+    def spying_stat_many(paths):
+        paths = list(paths)
+        probed.extend(paths)
+        return orig_stat_many(paths)
+
     board.stat = spying_stat
+    board.stat_many = spying_stat_many
     checked_phases = set()
     for _ in range(300):
         wake = server.wake_condition()
@@ -190,6 +197,7 @@ def test_wake_condition_derived_from_phase_declarations():
         if server.run.phase == "done":
             break
     board.stat = orig_stat
+    board.stat_many = orig_stat_many
     # the run must have exercised path-based waits in the polling phases
     assert "waiting_clients" in checked_phases
     assert "collect" in checked_phases or "evaluate" in checked_phases

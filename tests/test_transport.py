@@ -1,0 +1,380 @@
+"""Transport layer (DESIGN.md §Transport layer).
+
+Covers the tentpole contract of the pluggable-transport refactor:
+
+* conformance — one parametrized suite runs against ``InProcTransport``
+  and ``SocketTransport`` (a board-hosting subprocess behind
+  length-prefixed msgpack frames): put/get/stat/stat_many/list/delete/
+  latest_seq/version semantics must be observably identical, including
+  strict board-wide seq ordering under concurrent writers;
+* list fast-path — the directory-prefix index answers every glob
+  byte-identically to the brute-force fnmatchcase scan it replaced
+  (randomized regression), and actually takes the indexed path;
+* policy shell — MessageBoard tombstones/stats/auth behave the same
+  over either backend (the transport forgets deleted paths; the shell's
+  tombstones keep latest_seq watchers correct);
+* WAN model — per-actor profiles are deterministic functions of the
+  seed, charges accumulate on simulated clocks, twin models agree;
+* twin equivalence e2e — the same job over the in-proc dict and over a
+  socket board in a separate process lands on the same model (final
+  eval <= 1e-4, the discipline every backend swap in this repo obeys).
+"""
+import fnmatch
+import random
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.clients import ClientManagement
+from repro.core.communicator import MessageBoard
+from repro.core.metadata import MetadataStore
+from repro.core.transport import (InProcTransport, SocketTransport,
+                                  SocketTransportServer, WanModel,
+                                  _pattern_prefix_dir, make_transport)
+
+
+@pytest.fixture(params=["inproc", "socket"])
+def transport(request):
+    """A fresh backend per test: dict in-proc, or a newly spawned
+    board-hosting subprocess reached over the socket protocol."""
+    t, closer = make_transport(request.param)
+    yield t
+    closer()
+
+
+def _connect(transport):
+    """A second, independent connection to the same store (socket), or
+    the same object (in-proc — there is only one store)."""
+    if isinstance(transport, SocketTransport):
+        return SocketTransport(transport.address)
+    return transport
+
+
+# ---------------------------------------------------------------------------
+# conformance: identical observable semantics on every backend
+# ---------------------------------------------------------------------------
+def test_put_get_stat_roundtrip(transport):
+    meta = transport.put("runs/r1/hello/a", b"\x00\xffcipher", "silo-a")
+    assert meta["version"] == 1 and meta["seq"] == 1
+    assert transport.get("runs/r1/hello/a") == b"\x00\xffcipher"
+    st = transport.stat("runs/r1/hello/a")
+    assert st["author"] == "silo-a" and st["bytes"] == 8
+    assert st["version"] == 1 and st["seq"] == 1
+    assert transport.get("runs/r1/hello/missing") is None
+    assert transport.stat("runs/r1/hello/missing") is None
+
+
+def test_overwrite_bumps_version_and_seq(transport):
+    assert transport.put("p", b"v1", "server")["version"] == 1
+    meta = transport.put("p", b"v2", "server")
+    assert meta["version"] == 2 and meta["seq"] == 2
+    assert transport.get("p") == b"v2"
+    assert transport.seq == 2
+
+
+def test_delete_returns_seq_and_version_restarts(transport):
+    transport.put("a", b"x", "server")           # seq 1
+    transport.put("b", b"y", "server")           # seq 2
+    assert transport.delete("a") == 3            # deletion bumps seq
+    assert transport.delete("a") is None         # already gone
+    assert transport.get("a") is None
+    assert transport.seq == 3
+    # a transport forgets deleted paths entirely: re-put starts fresh
+    meta = transport.put("a", b"z", "server")
+    assert meta["version"] == 1 and meta["seq"] == 4
+
+
+def test_stat_many_is_one_batched_sweep(transport):
+    for i in range(5):
+        transport.put(f"runs/r/hb/c{i}", b"h" * (i + 1), "server")
+    paths = [f"runs/r/hb/c{i}" for i in range(5)] + ["runs/r/hb/missing"]
+    if isinstance(transport, SocketTransport):
+        before = transport.round_trips
+    metas = transport.stat_many(paths)
+    if isinstance(transport, SocketTransport):
+        assert transport.round_trips == before + 1   # ONE round trip
+    assert metas["runs/r/hb/missing"] is None
+    for i in range(5):
+        assert metas[f"runs/r/hb/c{i}"]["bytes"] == i + 1
+    assert transport.stat_many([]) == {}
+
+
+def test_latest_seq_over_live_paths(transport):
+    transport.put("x", b"1", "server")           # seq 1
+    transport.put("y", b"2", "server")           # seq 2
+    transport.put("x", b"3", "server")           # seq 3
+    assert transport.latest_seq(["x"]) == 3
+    assert transport.latest_seq(["y"]) == 2
+    assert transport.latest_seq(["x", "y", "nope"]) == 3
+    assert transport.latest_seq([]) == 0
+    assert transport.latest_seq(["nope"]) == 0
+
+
+def test_list_glob_semantics_byte_exact(transport):
+    for p in ("update/OrgA", "update/orga", "update/orgb", "other/OrgA"):
+        transport.put(p, b"x", "server")
+    # fnmatchcase semantics: case may NOT fold (client ids are
+    # case-sensitive), results sorted
+    assert transport.list("update/*") == ["update/OrgA", "update/orga",
+                                          "update/orgb"]
+    assert transport.list("update/org?") == ["update/orga", "update/orgb"]
+    assert transport.list("update/Org*") == ["update/OrgA"]
+    assert transport.list("update/OrgA") == ["update/OrgA"]   # no glob
+    assert transport.list("nothing/*") == []
+
+
+def test_get_if_newer_conditional_fetch(transport):
+    assert transport.get_if_newer("p", 0) == (None, 0)        # absent
+    transport.put("p", b"v1", "server")
+    assert transport.get_if_newer("p", 0) == (b"v1", 1)       # newer: blob
+    assert transport.get_if_newer("p", 1) == (None, 1)        # 304
+    transport.put("p", b"v2", "server")
+    assert transport.get_if_newer("p", 1) == (b"v2", 2)
+
+
+def test_concurrent_writers_strict_seq_order(transport):
+    """Writers on independent connections/threads: every mutation gets a
+    unique seq, the final seq equals the mutation count, and each path's
+    stored seq is consistent with its own write order."""
+    n_writers, n_puts = 4, 25
+    conns = [_connect(transport) for _ in range(n_writers)]
+    errors = []
+
+    def work(conn, i):
+        try:
+            for k in range(n_puts):
+                conn.put(f"w/{i}/{k}", bytes([i]) * 16, f"c{i}")
+        except Exception as exc:  # surface in the main thread
+            errors.append(exc)
+
+    threads = [threading.Thread(target=work, args=(c, i))
+               for i, c in enumerate(conns)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(transport.list("w/*")) == n_writers * n_puts
+    assert transport.seq == n_writers * n_puts
+    seqs = sorted(m["seq"] for m in transport.stat_many(
+        [f"w/{i}/{k}" for i in range(n_writers)
+         for k in range(n_puts)]).values())
+    assert seqs == list(range(1, n_writers * n_puts + 1))
+    for c in conns:
+        if c is not transport:
+            c.close()
+
+
+def test_socket_server_error_reply_keeps_connection_alive():
+    server = SocketTransportServer()
+    server.start(in_process=True)      # frame layer without the subprocess
+    t = SocketTransport((server.host, server.port))
+    try:
+        with pytest.raises(RuntimeError, match="unknown op"):
+            t._call("bogus_op")
+        t.put("still/alive", b"x", "server")      # same connection works on
+        assert t.get("still/alive") == b"x"
+    finally:
+        t.close()
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# list fast-path: prefix index must not change glob semantics
+# ---------------------------------------------------------------------------
+def test_pattern_prefix_extraction():
+    assert _pattern_prefix_dir("runs/r1/round/*") == "runs/r1/round"
+    assert _pattern_prefix_dir("runs/r1/round/3/update/c?") == \
+        "runs/r1/round/3/update"
+    assert _pattern_prefix_dir("runs/r[01]/x") == "runs"
+    assert _pattern_prefix_dir("*") is None          # wildcard first segment
+    assert _pattern_prefix_dir("run*/x") is None
+    assert _pattern_prefix_dir("exact/path") is None  # no specials at all
+
+
+def test_list_index_equivalent_to_full_scan():
+    """Randomized regression: the indexed list answers every pattern
+    byte-identically to the pre-refactor O(all-resources) fnmatchcase
+    scan."""
+    rng = random.Random(7)
+    t = InProcTransport()
+    segs = ["runs", "r0", "r1", "Round", "round", "0", "1", "update",
+            "Update", "cA", "ca", "hb", "x[1]"]
+    paths = set()
+    while len(paths) < 120:
+        depth = rng.randint(1, 5)
+        paths.add("/".join(rng.choice(segs) for _ in range(depth)))
+    for p in paths:
+        t.put(p, b"x", "server")
+    patterns = ["runs/*", "runs/r0/*", "runs/r?/round/*", "*", "*/*",
+                "runs/r0/round/0/update", "runs/[rR]*", "nope/*",
+                "runs/r0/*/0/*", "runs/r1/Round/*", "runs/r0/round/?",
+                "x[1]", "runs/x[1]"]
+    patterns += ["/".join(rng.choice(segs + ["*", "?"])
+                          for _ in range(rng.randint(1, 5)))
+                 for _ in range(60)]
+    for pat in patterns:
+        expect = sorted(p for p in paths if fnmatch.fnmatchcase(p, pat))
+        assert t.list(pat) == expect, f"index diverged on pattern {pat!r}"
+
+
+def test_list_uses_index_for_prefixed_patterns():
+    t = InProcTransport()
+    for i in range(10):
+        t.put(f"runs/r{i % 2}/u/{i}", b"x", "server")
+    assert t.list_index_hits == 0
+    t.list("runs/r0/u/*")
+    assert (t.list_index_hits, t.list_full_scans) == (1, 0)
+    t.list("runs/r0/u/3")            # no glob: exact membership
+    assert (t.list_index_hits, t.list_full_scans) == (2, 0)
+    t.list("*")                      # no usable prefix: full scan
+    assert (t.list_index_hits, t.list_full_scans) == (2, 1)
+
+
+# ---------------------------------------------------------------------------
+# MessageBoard policy shell over either backend
+# ---------------------------------------------------------------------------
+def _board(transport):
+    meta = MetadataStore()
+    return MessageBoard(ClientManagement(meta), meta, transport=transport)
+
+
+def test_board_tombstones_survive_backend_deletes(transport):
+    board = _board(transport)
+    board.put_server("runs/r/round/0/global", b"g")     # seq 1
+    board.put_server("runs/r/round/0/u/a", b"u")        # seq 2
+    assert board.latest_seq(["runs/r/round/0/u/a"]) == 2
+    board.delete("runs/r/round/0/u/a")                  # seq 3: tombstone
+    # the transport forgot the path; the shell's tombstone still reports
+    # the deletion to latest_seq watchers (round GC must wake them)
+    assert transport.stat("runs/r/round/0/u/a") is None
+    assert board.latest_seq(["runs/r/round/0/u/a"]) == 3
+    assert board.seq == 3
+    assert board.stats["deletes"] == 1
+    board.put_server("runs/r/round/0/u/a", b"u2")       # live again, seq 4
+    assert board.latest_seq(["runs/r/round/0/u/a"]) == 4
+
+
+def test_board_byte_accounting_both_directions(transport):
+    board = _board(transport)
+    clients = board.clients
+    user = "orgx-participant"
+    clients.create_user("bootstrap", user, "orgx", "pw")
+    silo = clients.request_registration(user, "orgx")
+    clients.approve_client("bootstrap", silo)
+    token = clients.ensure_token(silo)
+    board.put_server("runs/r/status", b"s" * 10)
+    board.put_client(silo, token, f"runs/r/update/{silo}", b"u" * 300)
+    assert board.stats["bytes_posted"] == 310
+    assert board.stats["bytes_posted_clients"] == 300
+    assert board.stats["bytes_posted_by"] == {"server": 10, silo: 300}
+    assert board.get("runs/r/status", reader=silo) == b"s" * 10
+    assert board.get(f"runs/r/update/{silo}") == b"u" * 300   # server read
+    board.get("runs/r/missing", reader=silo)                  # empty poll
+    assert board.stats["fetches"] == 3
+    assert board.stats["bytes_fetched"] == 310
+    assert board.stats["bytes_fetched_by"] == {silo: 10, "server": 300}
+
+
+def test_board_probe_accounting(transport):
+    board = _board(transport)
+    for i in range(4):
+        board.put_server(f"runs/r/hb/c{i}", b"h")
+    board.stat("runs/r/hb/c0")
+    board.stat_many([f"runs/r/hb/c{i}" for i in range(4)])
+    assert board.stats["stat_calls"] == 2
+    assert board.stats["stat_probes"] == 5
+    # the 4-path sweep would have been 4 calls path-by-path: 3 saved
+    assert board.stats["probes_saved"] == 3
+
+
+# ---------------------------------------------------------------------------
+# WAN cost model
+# ---------------------------------------------------------------------------
+def test_wan_profiles_deterministic():
+    a, b = WanModel(seed=3), WanModel(seed=3)
+    assert a.profile("orga") == b.profile("orga")
+    assert a.profile("orga") != a.profile("orgb")
+    assert WanModel(seed=4).profile("orga") != a.profile("orga")
+    lat, bw = a.profile("orga")
+    assert 0.01 <= lat <= 0.10 and 50e6 <= bw <= 1e9
+    # server access is LAN: near-free relative to any silo
+    slat, sbw = a.profile("server")
+    assert slat < lat and sbw > bw
+
+
+def test_wan_link_and_charges():
+    w = WanModel(seed=0)
+    lat_a, bw_a = w.profile("a")
+    lat_s, bw_s = w.profile("server")
+    assert w.link("a", "server") == (lat_a + lat_s, min(bw_a, bw_s))
+    t = w.transfer_time("a", "server", 1_000_000)
+    assert t == pytest.approx(lat_a + lat_s + 8e6 / min(bw_a, bw_s))
+    w.set_link("a", "b", 0.001, 1e9)
+    assert w.link("b", "a") == (0.001, 1e9)
+    assert w.elapsed() == 0.0
+    w.charge_transfer("a", "server", 1_000_000)
+    assert w.clocks["a"] == pytest.approx(t)
+    assert w.elapsed() == pytest.approx(t)
+    w.charge_rtt("server", "a")                  # empty poll: RTT only
+    assert w.clocks["a"] == pytest.approx(t + 2 * (lat_a + lat_s))
+    assert w.charges == 2
+    w.reset()
+    assert w.elapsed() == 0.0 and w.charges == 0
+
+
+def test_transport_charges_wan_per_resource():
+    w = WanModel(seed=1)
+    t = InProcTransport(wan=w)
+    t.put("u/a", b"x" * 1000, "silo-a")          # upload: silo-a pays
+    up = w.transfer_time("silo-a", "server", 1000)
+    assert w.clocks["silo-a"] == pytest.approx(up)
+    t.put("g", b"y" * 1000, "server")            # server put: board-local
+    assert "server" not in w.clocks
+    t.get("g", reader="silo-b")                  # download: silo-b pays
+    assert w.clocks["silo-b"] == pytest.approx(
+        w.transfer_time("server", "silo-b", 1000))
+    t.get("g")                                   # server-side read: free
+    before = w.clocks["silo-b"]
+    t.get_if_newer("g", 1, reader="silo-b")      # unchanged: RTT only
+    assert w.clocks["silo-b"] == pytest.approx(
+        before + w.rtt("server", "silo-b"))
+
+
+# ---------------------------------------------------------------------------
+# twin equivalence e2e: same job, both backends, same model
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_twin_equivalence_inproc_vs_socket():
+    from repro.core import Consortium
+    from repro.data import make_silo_datasets
+
+    def run(kind):
+        t, closer = make_transport(kind)
+        try:
+            con = Consortium(["ta", "tb"], seed=0, transport=t,
+                             master_key=b"k" * 32)
+            contract = con.negotiate({
+                "arch": "fedforecast-100m", "rounds": 2, "local_steps": 1,
+                "batch_size": 2, "lr": 1e-3, "data_schema": None,
+                "secure_aggregation": True})
+            job = con.server.job_creator.from_contract(contract)
+            ds = make_silo_datasets(2, vocab=512, seq_len=32, seed=0)
+            con.start(job, ds)
+            assert con.run_to_completion() == "done"
+            import jax
+            params = con.server.store.get(
+                con.server.run.history[-1]["digest"])
+            return ([np.asarray(x) for x in jax.tree.leaves(params)],
+                    con.server.run.history[-1].get("eval_loss"))
+        finally:
+            closer()
+
+    params_i, eval_i = run("inproc")
+    params_s, eval_s = run("socket")
+    err = max(float(np.abs(a - b).max())
+              for a, b in zip(params_i, params_s))
+    assert err <= 1e-4
+    if eval_i is not None and eval_s is not None:
+        assert abs(eval_i - eval_s) <= 1e-4
