@@ -46,15 +46,18 @@ ARCH = "fedforecast-100m"
 
 
 def build_fleet(n_silos, capacity, *, event_driven=True, staggered=True,
-                transport="inproc", wan_seed=None):
+                transport="inproc", wan_seed=None, telemetry=None):
     """Returns ``(scheduler, client_ids, closer)``; ``closer()`` tears
-    down the transport (the socket backend runs a board subprocess)."""
+    down the transport (the socket backend runs a board subprocess).
+    ``telemetry`` plumbs an enabled flight recorder through the board —
+    the regression gate uses it to measure the on/off overhead."""
     from repro.core import FederationScheduler, WanModel, make_transport
     from repro.data.synthetic import SiloDataset
     wan = WanModel(seed=wan_seed) if wan_seed is not None else None
     t, closer = make_transport(transport, wan=wan)
     sched = FederationScheduler(b"bench-key".ljust(32, b"0"),
-                                event_driven=event_driven, transport=t)
+                                event_driven=event_driven, transport=t,
+                                telemetry=telemetry)
     cids = []
     for i in range(n_silos):
         # real silos poll on their own cadence; stagger 1/2/4 passes so

@@ -31,6 +31,9 @@ from repro.core.scheduler import (FederationScheduler,
                                   JobEntry)  # noqa: F401
 from repro.core.server import FLServer, ModelStore  # noqa: F401
 from repro.core.simulation import Consortium  # noqa: F401
+from repro.core.telemetry import (Counter, Gauge, Histogram,
+                                  MetricsRegistry, Span,
+                                  Telemetry)  # noqa: F401
 from repro.core.transport import (InProcTransport, SocketTransport,
                                   SocketTransportServer, Transport, WanModel,
                                   make_transport)  # noqa: F401

@@ -110,6 +110,9 @@ class FLClientNode:
         self.cohort = sorted(cohort)
         self.pair_secret = pair_secret
         self.config = config or ClientConfig()
+        # the federation-wide observability bundle rides the board — the
+        # same instance the scheduler and servers stamp their spans on
+        self.telemetry = comm.board.telemetry
         # `is None`, not truthiness: the agent shares its (possibly still
         # empty, hence falsy) store across this silo's nodes — replacing
         # it would split the silo's provenance trail per run
@@ -269,12 +272,22 @@ class FLClientNode:
         if self.round_done >= rnd and self.hp_seen == hp:
             return "round_already_done"
         base = f"runs/{self.run_id}/round/{hp}/{rnd}"
-        msg = self.comm.fetch(f"{base}/global", broadcast=True)
+        tel = self.telemetry
+        with tel.span("client.fetch", cat="client", actor=self.client_id,
+                      run_id=self.run_id, attrs={"round": rnd}):
+            msg = self.comm.fetch(f"{base}/global", broadcast=True)
         if msg is None:
             return "waiting_global"
         base_params = jax.tree.map(jnp.asarray, msg["params"])
-        params, loss, n_examples = self._train_local(
-            base_params, float(status.get("lr", self.job.lr)))
+        with tel.span("client.train", cat="client", actor=self.client_id,
+                      run_id=self.run_id, attrs={"round": rnd}) as sp:
+            params, loss, n_examples = self._train_local(
+                base_params, float(status.get("lr", self.job.lr)))
+            sp.set(loss=float(loss))
+        comp_sp = tel.span("client.compress", cat="client",
+                           actor=self.client_id, run_id=self.run_id,
+                           attrs={"round": rnd})
+        comp_sp.__enter__()
         if self.job.secure_aggregation and self.job.compression != "none":
             # masked-quantized plane (DESIGN.md §Composable privacy): the
             # error-feedback compressor quantizes the weighted packed
@@ -334,7 +347,10 @@ class FLClientNode:
         else:
             payload = {"params": jax.tree.map(np.asarray, params),
                        "n_examples": n_examples, "train_loss": loss}
-        self.comm.post(f"{base}/update/{self.client_id}", payload)
+        comp_sp.__exit__(None, None, None)
+        with tel.span("client.post", cat="client", actor=self.client_id,
+                      run_id=self.run_id, attrs={"round": rnd}):
+            self.comm.post(f"{base}/update/{self.client_id}", payload)
         self.round_done, self.hp_seen = rnd, hp
         self.metadata.record_provenance(
             actor=self.client_id, operation="local_train",
@@ -361,9 +377,14 @@ class FLClientNode:
         msg = self.comm.fetch_cached(f"{base}/global", broadcast=True)
         if msg is None:
             return "waiting_global"
+        tel = self.telemetry
         base_params = jax.tree.map(jnp.asarray, msg["params"])
-        params, loss, n_examples = self._train_local(
-            base_params, float(status.get("lr", self.job.lr)))
+        with tel.span("client.train", cat="client", actor=self.client_id,
+                      run_id=self.run_id,
+                      attrs={"base_commit": rnd}) as sp:
+            params, loss, n_examples = self._train_local(
+                base_params, float(status.get("lr", self.job.lr)))
+            sp.set(loss=float(loss))
         from repro.core.protocol import pack_delta
         delta = pack_delta(params, base_params)
         if self.job.compression != "none":
@@ -377,8 +398,10 @@ class FLClientNode:
         else:
             payload = {"delta": delta, "base_commit": rnd,
                        "n_examples": n_examples, "train_loss": loss}
-        self.comm.post(f"runs/{self.run_id}/async/update/{self.client_id}",
-                       payload)
+        with tel.span("client.post", cat="client", actor=self.client_id,
+                      run_id=self.run_id, attrs={"base_commit": rnd}):
+            self.comm.post(
+                f"runs/{self.run_id}/async/update/{self.client_id}", payload)
         self.metadata.record_provenance(
             actor=self.client_id, operation="local_train_async",
             subject=f"{self.run_id}/c{rnd}", outcome="update_posted",

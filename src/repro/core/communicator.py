@@ -21,8 +21,18 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import crypto, serialization
 from repro.core.clients import ClientManagement
 from repro.core.metadata import MetadataStore
+from repro.core.telemetry import Telemetry
 from repro.core.transport import (InProcTransport, Resource, Transport,
                                   WanModel)
+
+
+def _run_of(path: str) -> Optional[str]:
+    """Run namespace of a board path (``runs/<rid>/...``), or None."""
+    if path.startswith("runs/"):
+        end = path.find("/", 5)
+        if end > 5:
+            return path[5:end]
+    return None
 
 __all__ = ["Resource", "MessageBoard", "ServerCommunicator",
            "ClientCommunicator"]
@@ -60,24 +70,62 @@ class MessageBoard:
 
     def __init__(self, clients: ClientManagement, metadata: MetadataStore,
                  transport: Optional[Transport] = None,
-                 wan: Optional[WanModel] = None):
+                 wan: Optional[WanModel] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.clients = clients
         self.metadata = metadata
         self.transport = (transport if transport is not None
                           else InProcTransport(wan=wan))
+        # The board anchors the federation's Telemetry bundle: every
+        # component (scheduler, servers, client agents) already holds the
+        # board, so they all share this instance. Disabled by default.
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        self.telemetry.attach_transport(self.transport)
+        if self.transport.wan is not None:
+            self.telemetry.attach_wan(self.transport.wan)
         self._tombstones: "OrderedDict[str, int]" = OrderedDict()
         self._tombstone_floor = 0         # max seq among evicted tombstones
         # bytes_posted counts the upload side, bytes_fetched the download
         # side (both directions cross the WAN in deployment — the cost
-        # model needs both); the *_by maps break traffic down per actor.
-        # stat_calls/stat_probes/probes_saved account the batched probe
-        # sweeps: one stat_many over k paths is 1 call, k probes, k-1
-        # saved round-trips vs. per-path stat.
-        self.stats = {"posts": 0, "fetches": 0, "bytes_posted": 0,
-                      "bytes_posted_clients": 0, "bytes_fetched": 0,
-                      "rejected": 0, "deletes": 0,
-                      "stat_calls": 0, "stat_probes": 0, "probes_saved": 0,
-                      "bytes_posted_by": {}, "bytes_fetched_by": {}}
+        # model needs both); the *_by families break traffic down per
+        # actor. stat_calls/stat_probes/probes_saved account the batched
+        # probe sweeps: one stat_many over k paths is 1 call, k probes,
+        # k-1 saved round-trips vs. per-path stat. All live in the shared
+        # metrics registry now; ``stats`` assembles the legacy dict view.
+        reg = self.telemetry.metrics
+        self._c_posts = reg.counter("board.posts")
+        self._c_fetches = reg.counter("board.fetches")
+        self._c_bytes_posted = reg.counter("board.bytes_posted")
+        self._c_bytes_posted_clients = reg.counter(
+            "board.bytes_posted_clients")
+        self._c_bytes_fetched = reg.counter("board.bytes_fetched")
+        self._c_rejected = reg.counter("board.rejected")
+        self._c_deletes = reg.counter("board.deletes")
+        self._c_stat_calls = reg.counter("board.stat_calls")
+        self._c_stat_probes = reg.counter("board.stat_probes")
+        self._c_probes_saved = reg.counter("board.probes_saved")
+
+    @property
+    def stats(self) -> dict:
+        """Traffic accounting in the board's historical dict shape —
+        assembled fresh from the metrics registry on every read, so a
+        caller's snapshot is detached plain data (nothing shares live
+        nested references with the board; mutate it freely)."""
+        reg = self.telemetry.metrics
+        return {"posts": self._c_posts.read(),
+                "fetches": self._c_fetches.read(),
+                "bytes_posted": self._c_bytes_posted.read(),
+                "bytes_posted_clients": self._c_bytes_posted_clients.read(),
+                "bytes_fetched": self._c_bytes_fetched.read(),
+                "rejected": self._c_rejected.read(),
+                "deletes": self._c_deletes.read(),
+                "stat_calls": self._c_stat_calls.read(),
+                "stat_probes": self._c_stat_probes.read(),
+                "probes_saved": self._c_probes_saved.read(),
+                "bytes_posted_by": reg.labeled("board.bytes_posted_by",
+                                               "actor"),
+                "bytes_fetched_by": reg.labeled("board.bytes_fetched_by",
+                                                "actor")}
 
     @property
     def seq(self) -> int:
@@ -92,23 +140,30 @@ class MessageBoard:
         self.transport.close()
 
     def _account_fetch(self, reader: str, nbytes: Optional[int]):
-        self.stats["fetches"] += 1
+        self._c_fetches.inc()
         if nbytes:
-            self.stats["bytes_fetched"] += nbytes
-            by = self.stats["bytes_fetched_by"]
-            by[reader] = by.get(reader, 0) + nbytes
+            self._c_bytes_fetched.inc(nbytes)
+            self.telemetry.metrics.counter("board.bytes_fetched_by",
+                                           actor=reader).inc(nbytes)
 
     def _put(self, path: str, blob: bytes, author: str):
         self._tombstones.pop(path, None)   # a re-created path is live again
-        self.transport.put(path, blob, author)
-        self.stats["posts"] += 1
-        self.stats["bytes_posted"] += len(blob)
-        by = self.stats["bytes_posted_by"]
-        by[author] = by.get(author, 0) + len(blob)
+        tel = self.telemetry
+        if tel.enabled:
+            with tel.span("board.put", cat="rpc", actor=author,
+                          run_id=_run_of(path),
+                          attrs={"path": path, "bytes": len(blob)}):
+                self.transport.put(path, blob, author)
+        else:
+            self.transport.put(path, blob, author)
+        self._c_posts.inc()
+        self._c_bytes_posted.inc(len(blob))
+        tel.metrics.counter("board.bytes_posted_by",
+                            actor=author).inc(len(blob))
         if author != "server":
             # silo-uploaded bytes: the WAN cost the compressed data plane
             # exists to shrink (bench_compression reports this counter)
-            self.stats["bytes_posted_clients"] += len(blob)
+            self._c_bytes_posted_clients.inc(len(blob))
 
     # server-side put (no token needed, done by the coordinator process)
     def put_server(self, path: str, blob: bytes):
@@ -116,7 +171,7 @@ class MessageBoard:
 
     def put_client(self, client_id: str, token: str, path: str, blob: bytes):
         if not self.clients.validate_token(client_id, token):
-            self.stats["rejected"] += 1
+            self._c_rejected.inc()
             self.metadata.record_provenance(
                 actor=client_id, operation="post", subject=path,
                 outcome="rejected_auth")
@@ -124,7 +179,14 @@ class MessageBoard:
         self._put(path, blob, client_id)
 
     def get(self, path: str, *, reader: str = "server") -> Optional[bytes]:
-        blob = self.transport.get(path, reader=reader)
+        tel = self.telemetry
+        if tel.enabled:
+            with tel.span("board.get", cat="rpc", actor=reader,
+                          run_id=_run_of(path), attrs={"path": path}) as sp:
+                blob = self.transport.get(path, reader=reader)
+                sp.set(bytes=len(blob) if blob is not None else 0)
+        else:
+            blob = self.transport.get(path, reader=reader)
         self._account_fetch(reader, len(blob) if blob is not None else None)
         return blob
 
@@ -135,7 +197,17 @@ class MessageBoard:
         ``(None, stored_version)`` — the unchanged case costs a
         metadata-only round trip, not a re-download (client pollers hit
         ``runs/<rid>/status`` every tick; it rarely changes)."""
-        blob, ver = self.transport.get_if_newer(path, version, reader=reader)
+        tel = self.telemetry
+        if tel.enabled:
+            with tel.span("board.get_if_newer", cat="rpc", actor=reader,
+                          run_id=_run_of(path), attrs={"path": path}) as sp:
+                blob, ver = self.transport.get_if_newer(path, version,
+                                                        reader=reader)
+                sp.set(bytes=len(blob) if blob is not None else 0,
+                       hit=blob is None)
+        else:
+            blob, ver = self.transport.get_if_newer(path, version,
+                                                    reader=reader)
         self._account_fetch(reader, len(blob) if blob is not None else None)
         return blob, ver
 
@@ -143,8 +215,8 @@ class MessageBoard:
         """Resource metadata without touching the ciphertext — used by the
         server's heartbeat probes (``collect_heartbeats``): the coordinator
         can see *that* a client posted and when, never *what*."""
-        self.stats["stat_calls"] += 1
-        self.stats["stat_probes"] += 1
+        self._c_stat_calls.inc()
+        self._c_stat_probes.inc()
         return self.transport.stat(path)
 
     def stat_many(self, paths) -> Dict[str, Optional[dict]]:
@@ -154,9 +226,15 @@ class MessageBoard:
         paths = list(paths)
         if not paths:
             return {}
-        self.stats["stat_calls"] += 1
-        self.stats["stat_probes"] += len(paths)
-        self.stats["probes_saved"] += len(paths) - 1
+        self._c_stat_calls.inc()
+        self._c_stat_probes.inc(len(paths))
+        self._c_probes_saved.inc(len(paths) - 1)
+        tel = self.telemetry
+        if tel.enabled:
+            with tel.span("board.stat_many", cat="rpc", actor="server",
+                          run_id=_run_of(paths[0]),
+                          attrs={"paths": len(paths)}):
+                return self.transport.stat_many(paths)
         return self.transport.stat_many(paths)
 
     def latest_seq(self, paths) -> int:
@@ -203,7 +281,7 @@ class MessageBoard:
             while len(self._tombstones) > self.TOMBSTONE_CAP:
                 _, evicted = self._tombstones.popitem(last=False)
                 self._tombstone_floor = max(self._tombstone_floor, evicted)
-            self.stats["deletes"] += 1
+            self._c_deletes.inc()
 
 
 class ServerCommunicator:

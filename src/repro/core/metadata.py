@@ -21,13 +21,19 @@ import hashlib
 import json
 import os
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 
 class MetadataStore:
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None,
+                 clock: Optional[Callable[[], float]] = None):
+        """``clock`` stamps every record's ``ts`` (default ``time.time``).
+        Inject a fake for deterministic provenance under test, or the
+        WanModel's ``elapsed`` so WAN-bench trails carry simulated time —
+        the same timeline the telemetry sim-clock lane plots."""
         self._records: List[dict] = []
         self._path = path
+        self._clock = clock or time.time
         self._last_hash = "0" * 64
         if path and os.path.exists(path):
             self.load(path)
@@ -53,7 +59,7 @@ class MetadataStore:
     def _append(self, record: dict) -> dict:
         record = dict(record)
         record["seq"] = len(self._records)
-        record["ts"] = record.get("ts", time.time())
+        record["ts"] = record.get("ts", self._clock())
         record["prev_hash"] = self._last_hash
         payload = json.dumps(record, sort_keys=True, default=str)
         record["hash"] = hashlib.sha256(payload.encode()).hexdigest()

@@ -594,6 +594,19 @@ class AsyncServePhase(Phase):
         r = server.run
         st = r.proto
         job = r.job
+        # the async protocol spends its whole life in one phase, so the
+        # per-phase spans can't show commit cadence — each commit gets its
+        # own span (folds + staleness tell the staleness-discount story)
+        with server.telemetry.span(
+                "async.commit", cat="phase", actor="server",
+                run_id=r.run_id,
+                attrs={"commit": r.round, "folds": st["folds"]}):
+            return self._commit_inner(server)
+
+    def _commit_inner(self, server) -> bool:
+        r = server.run
+        st = r.proto
+        job = r.job
         old_params = server.store.get(r.global_digest)
         layout = PackedLayout.for_tree(old_params)
         # convex combination of buffered deltas: weights are the positive

@@ -77,7 +77,7 @@ class FederationScheduler:
                  metadata: Optional[MetadataStore] = None,
                  clients: Optional[ClientManagement] = None,
                  board: Optional[MessageBoard] = None,
-                 transport=None, wan=None,
+                 transport=None, wan=None, telemetry=None,
                  event_driven: bool = True, patience: int = 32,
                  preemptive: bool = False, server_id: str = "fl-server"):
         self.master_key = master_key or secrets.token_bytes(32)
@@ -87,9 +87,12 @@ class FederationScheduler:
                         else clients)
         # transport/wan: storage backend + WAN cost model for the board
         # this scheduler builds; ignored when a prebuilt board is passed
+        # (telemetry likewise — the board anchors the shared bundle)
         self.board = (MessageBoard(self.clients, self.metadata,
-                                   transport=transport, wan=wan)
+                                   transport=transport, wan=wan,
+                                   telemetry=telemetry)
                       if board is None else board)
+        self.telemetry = self.board.telemetry
         self.comm = ServerCommunicator(self.board, self.master_key, server_id)
         self.pair_secret = self.master_key + b"/pairwise"
         self.event_driven = event_driven
@@ -104,9 +107,18 @@ class FederationScheduler:
         self.passes = 0
         self._seq = 0
         self._last_progress = 0       # pass of the last admit/complete
-        self.stats = {"passes": 0, "server_ticks": 0, "idle_skips": 0,
-                      "admitted": 0, "preempted": 0, "completed": 0,
-                      "suspended": 0}
+        reg = self.telemetry.metrics
+        self._c = {k: reg.counter(f"sched.{k}")
+                   for k in ("passes", "server_ticks", "idle_skips",
+                             "admitted", "preempted", "completed",
+                             "suspended")}
+
+    @property
+    def stats(self) -> dict:
+        """Scheduling counters (legacy dict shape), assembled fresh from
+        the metrics registry — a caller's snapshot never mutates under
+        later passes."""
+        return {k: c.read() for k, c in self._c.items()}
 
     # ------------------------------------------------------------------
     # Fleet setup
@@ -299,6 +311,13 @@ class FederationScheduler:
         fresh = run is None or run.run_id != entry.run_id
         cohort = self._required_cohort(entry)
         self.queue.remove(entry)
+        tel = self.telemetry
+        sid = (tel.open_span("sched.admit" if fresh else "sched.readmit",
+                             cat="scheduler", actor="scheduler",
+                             run_id=entry.run_id,
+                             attrs={"cohort": len(cohort),
+                                    "priority": entry.priority})
+               if tel.enabled else 0)
         try:
             if fresh:
                 entry.server.start_run(entry.job, run_id=entry.run_id,
@@ -327,6 +346,12 @@ class FederationScheduler:
                 actor="scheduler", operation="admit_job",
                 subject=entry.run_id, outcome="failed",
                 details={"error": str(exc), "cohort": cohort})
+            tel.close_span(sid, outcome="failed", error=str(exc))
+            if tel.enabled:
+                # flight-recorder dump: the spans leading up to the
+                # failed admission, frozen for post-mortem inspection
+                tel.record_incident(entry.run_id,
+                                    f"admission failed: {exc}")
             return
         waited, entry.queued_passes = entry.queued_passes, 0
         entry.cohort = cohort
@@ -335,7 +360,8 @@ class FederationScheduler:
         entry.wake = WakeCondition(poll=True)
         entry.wake_seq = 0
         self.running.append(entry)
-        self.stats["admitted"] += 1
+        self._c["admitted"].inc()
+        tel.close_span(sid, outcome="admitted", waited_passes=waited)
         self.metadata.record_provenance(
             actor="scheduler",
             operation="admit_job" if fresh else "readmit_job",
@@ -364,27 +390,39 @@ class FederationScheduler:
         inject faults (dropout) or observe progress at exact phase
         boundaries."""
         self.passes += 1
-        self.stats["passes"] += 1
+        self._c["passes"].inc()
+        tel = self.telemetry
+        pass_sid = (tel.open_span("sched.pass", cat="scheduler",
+                                  actor="scheduler",
+                                  attrs={"pass": self.passes})
+                    if tel.enabled else 0)
         for entry in self.queue:
             entry.queued_passes += 1
         self._admit()
         for entry in list(self.running):
             if self._runnable(entry):
                 snapshot = self.board.seq
-                entry.server.tick()
+                if tel.enabled:
+                    with tel.span("sched.tick", cat="scheduler",
+                                  actor="scheduler", run_id=entry.run_id):
+                        entry.server.tick()
+                else:
+                    entry.server.tick()
                 entry.ticks += 1
-                self.stats["server_ticks"] += 1
+                self._c["server_ticks"].inc()
                 entry.wake = entry.server.wake_condition()
                 entry.wake_seq = snapshot
             else:
                 entry.idle_skips += 1
-                self.stats["idle_skips"] += 1
+                self._c["idle_skips"].inc()
             if on_phase is not None:
                 run = entry.server.run
                 on_phase(entry.run_id, run.phase if run else "idle")
         for cid in sorted(self.agents):
             self.agents[cid].tick(self.passes)
         self._reap()
+        tel.close_span(pass_sid, running=len(self.running),
+                       queued=len(self.queue))
 
     def _reap(self):
         for entry in list(self.running):
@@ -399,7 +437,7 @@ class FederationScheduler:
                 self.agents[cid].release(entry.run_id)
             if phase == "done":
                 entry.state = "done"
-                self.stats["completed"] += 1
+                self._c["completed"].inc()
                 self.metadata.record_provenance(
                     actor="scheduler", operation="complete_job",
                     subject=entry.run_id, outcome="completed",
@@ -407,11 +445,13 @@ class FederationScheduler:
                              "idle_skips": entry.idle_skips})
             else:
                 entry.state = "suspended"
-                self.stats["suspended"] += 1
+                self._c["suspended"].inc()
                 self.metadata.record_provenance(
                     actor="scheduler", operation="suspend_job",
                     subject=entry.run_id, outcome="suspended",
                     details={"reason": entry.server.run.pause_reason})
+                # (incident dump happens server-side at the pause itself —
+                # FLServer._note_phase — so reap does not double-record)
         # freed capacity is re-leased at the next pass's _admit — keeping
         # admission at the pass boundary preserves the loop invariant that
         # every admitted job is ticked on every pass it spends runnable
@@ -462,6 +502,11 @@ class FederationScheduler:
         entry = self.entries[run_id]
         if entry.state != "running":
             return
+        tel = self.telemetry
+        sid = (tel.open_span("sched.preempt", cat="scheduler",
+                             actor="scheduler", run_id=run_id,
+                             attrs={"reason": reason})
+               if tel.enabled else 0)
         entry.server.pause("scheduler", f"preempted: {reason}")
         self.running.remove(entry)
         for cid in entry.cohort:
@@ -470,7 +515,8 @@ class FederationScheduler:
         entry.state = "queued"
         entry.queued_passes = 0
         self.queue.append(entry)
-        self.stats["preempted"] += 1
+        self._c["preempted"].inc()
+        tel.close_span(sid)
         self.metadata.record_provenance(
             actor="scheduler", operation="preempt_job", subject=run_id,
             outcome="requeued", details={"reason": reason})
@@ -498,7 +544,12 @@ class FederationScheduler:
             agent.release(run_id)
 
     def monitor(self) -> dict:
-        """Fleet-level snapshot (complements FLServer.monitor per run)."""
+        """Fleet-level snapshot (complements FLServer.monitor per run).
+
+        Every value is freshly built plain data — nothing shares live
+        mutable references with the scheduler, so the snapshot a caller
+        holds cannot change under later passes (regression-tested in
+        tests/test_telemetry.py)."""
         return {
             "passes": self.passes,
             "queued": [e.run_id for e in self.queue],
@@ -506,5 +557,5 @@ class FederationScheduler:
             "leases": {cid: sorted(runs)
                        for cid, runs in self.leases.items() if runs},
             "capacity": dict(self.capacity),
-            "stats": dict(self.stats),
+            "stats": self.stats,       # property: assembled fresh per read
         }

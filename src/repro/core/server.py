@@ -121,6 +121,7 @@ class FLServer:
         self.board = (MessageBoard(self.clients, self.metadata)
                       if board is None else board)
         self.comm = ServerCommunicator(self.board, master_key, server_id)
+        self.telemetry = self.board.telemetry
         self.job_creator = JobCreator(self.metadata)
         self.store = ModelStore(self.metadata)
         self.cockpit: Optional[GovernanceCockpit] = None
@@ -129,6 +130,8 @@ class FLServer:
         self.pair_secret = master_key + b"/pairwise"
         self.seed = seed
         self._rng = jax.random.PRNGKey(seed)
+        self._phase_sid = 0            # open span id of the active phase
+        self._phase_key = None         # (run_id, phase) that span covers
 
     # ------------------------------------------------------------------
     # Governance wiring
@@ -199,8 +202,37 @@ class FLServer:
                               {"token_issued": True, "run_id": run_id},
                               client_id=cid)
         self.protocol.phase(self.run.phase).enter(self)
+        self._note_phase()
         self._publish_status()
         return run_id
+
+    def _note_phase(self):
+        """Keep exactly one open trace span per (run, active phase): close
+        the previous phase's span on any transition — however it happened
+        (poll return, helper-set deadline pause, external ``pause``) — and
+        open the next one. Spans therefore measure enter→exit per phase
+        *visit*, across however many ticks the phase takes. A ``paused``
+        transition also dumps the run's flight-recorder ring as an
+        incident. No-op when telemetry is disabled."""
+        tel = self.telemetry
+        if not tel.enabled or self.run is None:
+            return
+        r = self.run
+        key = (r.run_id, r.phase, r.round, r.hp_index, r.round_attempt)
+        if key == self._phase_key:
+            return
+        tel.close_span(self._phase_sid)
+        self._phase_key = key
+        if r.phase == "done":
+            self._phase_sid = 0        # terminal: nothing left to time
+        else:
+            self._phase_sid = tel.open_span(
+                f"phase:{r.phase}", cat="phase", actor="server",
+                run_id=r.run_id,
+                attrs={"round": r.round, "hp_index": r.hp_index,
+                       "attempt": r.round_attempt})
+        if r.phase == "paused":
+            tel.record_incident(r.run_id, r.pause_reason or "paused")
 
     def _arch_cfg(self, job: FLJob):
         from repro.configs import get_config
@@ -243,6 +275,7 @@ class FLServer:
         if r.phase != prev_phase:
             r.phase_ticks = 0
             self.protocol.phase(r.phase).enter(self)
+        self._note_phase()
         self._publish_status()
         return r.phase
 
@@ -375,8 +408,11 @@ class FLServer:
                     if corrections is not None else None)
             denom = float(sum(sizes[c] for c in cids)) / float(
                 job.local_steps * job.batch_size)
-            total = compression.reduce_masked([updates[c] for c in cids],
-                                              corrections=corr)
+            with self.telemetry.kernel_span(
+                    "masked_dequant_reduce", run_id=r.run_id,
+                    scheme="secure+compressed", cohort=str(len(cids))):
+                total = compression.reduce_masked(
+                    [updates[c] for c in cids], corrections=corr)
             mean_delta = unpack_pytree(total / np.float32(denom), layout)
             new_global = jax.tree.map(
                 lambda p, dlt: np.asarray(p, np.float32)
@@ -396,8 +432,12 @@ class FLServer:
                     if corrections is not None else None)
             denom = float(sum(sizes[c] for c in cids)) / float(
                 job.local_steps * job.batch_size)
-            total = secure_agg.aggregate_masked_packed(
-                stacked, np.ones(len(cids), np.float32), corrections=corr)
+            with self.telemetry.kernel_span(
+                    "masked_sum", run_id=r.run_id, scheme="secure",
+                    cohort=str(len(cids))):
+                total = secure_agg.aggregate_masked_packed(
+                    stacked, np.ones(len(cids), np.float32),
+                    corrections=corr)
             new_global = unpack_pytree(total / denom, layout)
         elif job.compression != "none":
             # compressed data plane: clients posted lossy-coded packed
@@ -411,8 +451,11 @@ class FLServer:
             layout = PackedLayout.for_tree(old_params)
             w = np.asarray([sizes[c] for c in cids], np.float64)
             w = (w / w.sum()).astype(np.float32)
-            total, delta_norms = compression.reduce_compressed(
-                [updates[c] for c in cids], w, return_norms=True)
+            with self.telemetry.kernel_span(
+                    "dequant_reduce", run_id=r.run_id, scheme="compressed",
+                    cohort=str(len(cids))):
+                total, delta_norms = compression.reduce_compressed(
+                    [updates[c] for c in cids], w, return_norms=True)
             mean_delta = unpack_pytree(total, layout)
             new_global = jax.tree.map(
                 lambda p, d: np.asarray(p, np.float32)
@@ -508,6 +551,7 @@ class FLServer:
         self.metadata.record_provenance(
             actor=actor, operation="pause_run", subject=r.run_id,
             outcome="paused", details={"reason": reason})
+        self._note_phase()
         self._publish_status()
 
     def admin_resume(self, admin: str):
@@ -528,6 +572,7 @@ class FLServer:
                 details={"round_attempt": r.round_attempt,
                          "resumed_into": r.phase,
                          "cohort": list(r.cohort)})
+            self._note_phase()
             self._publish_status()
 
     def monitor(self) -> dict:
@@ -538,7 +583,9 @@ class FLServer:
             "round": r.round if r else None,
             "protocol": self.protocol.name if self.protocol else None,
             "dropped_clients": list(r.dropped) if r else [],
-            "board": dict(self.board.stats),
+            # board.stats is a property assembled fresh from the metrics
+            # registry — already a detached snapshot, no copy needed
+            "board": self.board.stats,
             "registered_clients": self.clients.active_clients(),
             "models_stored": len(self.store.list()),
             "metadata_records": len(self.metadata),

@@ -23,15 +23,17 @@ class Consortium:
     def __init__(self, organizations: List[str], *, seed: int = 0,
                  master_key: Optional[bytes] = None,
                  metadata_path: Optional[str] = None,
-                 transport=None, wan=None):
+                 transport=None, wan=None, telemetry=None):
         self.master_key = master_key or secrets.token_bytes(32)
         metadata = MetadataStore(path=metadata_path) if metadata_path else None
-        # transport/wan plumb straight through to the MessageBoard: the
-        # same consortium runs over the in-proc dict or a board-hosting
-        # subprocess (tests/test_transport.py proves twin equivalence)
+        # transport/wan/telemetry plumb straight through to the
+        # MessageBoard: the same consortium runs over the in-proc dict or
+        # a board-hosting subprocess (tests/test_transport.py proves twin
+        # equivalence), with or without the flight recorder
         self.scheduler = FederationScheduler(self.master_key,
                                              metadata=metadata,
-                                             transport=transport, wan=wan)
+                                             transport=transport, wan=wan,
+                                             telemetry=telemetry)
         self.server = self.scheduler.new_server(seed=seed)
         self.organizations = organizations
         self.admin = "server-admin"
@@ -49,6 +51,11 @@ class Consortium:
             self.client_ids[org] = cid
         self.nodes = []
         self.run_id: Optional[str] = None
+
+    @property
+    def telemetry(self):
+        """The federation's shared observability bundle (on the board)."""
+        return self.scheduler.telemetry
 
     # ------------------------------------------------------------------
     def negotiate(self, decisions: dict):

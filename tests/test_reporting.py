@@ -1,0 +1,112 @@
+"""Direct unit tests for core/reporting.py (previously exercised only
+incidentally via test_system.py / test_metadata_validation.py).
+
+Pins the hardening: rounds whose metrics lack both ``mean_train_loss``
+and ``loss`` — or lack ``metrics``/``model_digest`` entirely — must
+degrade to NaN / None entries, never raise.
+"""
+import math
+
+import numpy as np
+
+from repro.core.metadata import MetadataStore
+from repro.core.reporting import (client_report, governance_report,
+                                  run_report, run_timeline)
+
+
+def seeded_store() -> MetadataStore:
+    md = MetadataStore()
+    md.record_run_start("run-1", {"arch": "fedforecast-100m", "rounds": 3})
+    md.record_round("run-1", 0, {"mean_train_loss": 2.5}, "digest-0",
+                    {"data_size": {"c1": 1.0}})
+    md.record_round("run-1", 1, {"loss": 2.1}, "digest-1")
+    md.record_run_end("run-1", "completed", final_digest="digest-1")
+    return md
+
+
+def test_run_report_happy_path():
+    rep = run_report(seeded_store(), "run-1")
+    assert rep["status"] == "completed"
+    assert rep["n_rounds"] == 2
+    assert rep["loss_curve"] == [2.5, 2.1]       # mean_train_loss, then loss
+    assert rep["final_digest"] == "digest-1"
+    assert rep["rounds"][0]["contributions"] == {"data_size": {"c1": 1.0}}
+    assert rep["job"]["rounds"] == 3
+
+
+def test_run_report_tolerates_rounds_without_any_loss():
+    md = seeded_store()
+    md.record_round("run-1", 2, {"eval_only": True}, "digest-2")
+    rep = run_report(md, "run-1")
+    assert len(rep["loss_curve"]) == 3
+    assert rep["loss_curve"][:2] == [2.5, 2.1]
+    assert math.isnan(rep["loss_curve"][2])      # NaN, not None / KeyError
+    # the NaN keeps downstream numeric consumers working (no TypeError)
+    finite = np.isfinite(np.asarray(rep["loss_curve"], dtype=float))
+    assert list(finite) == [True, True, False]
+
+
+def test_run_report_tolerates_missing_metrics_and_digest():
+    md = MetadataStore()
+    md.record_run_start("run-x", {})
+    # a record written by an external tool straight onto the chain: no
+    # metrics, no model_digest — report must degrade, not raise
+    md._append({"kind": "experiment", "event": "round", "run_id": "run-x",
+                "round": 0})
+    rep = run_report(md, "run-x")
+    assert rep["status"] == "running"
+    assert rep["rounds"][0]["metrics"] == {}
+    assert rep["rounds"][0]["model_digest"] is None
+    assert math.isnan(rep["loss_curve"][0])
+
+
+def test_run_report_unknown_run_is_empty_not_an_error():
+    rep = run_report(MetadataStore(), "no-such-run")
+    assert rep["n_rounds"] == 0
+    assert rep["loss_curve"] == []
+    assert rep["job"] is None and rep["status"] == "running"
+
+
+def test_governance_report_filters_governance_operations():
+    md = MetadataStore()
+    md.record_provenance(actor="u1", operation="propose", subject="lr",
+                         outcome="proposed")
+    md.record_provenance(actor="u2", operation="vote", subject="p-1",
+                         outcome="accepted")
+    md.record_provenance(actor="c1", operation="local_train", subject="r0",
+                         outcome="update_posted")
+    ops = [r["operation"] for r in governance_report(md)]
+    assert ops == ["propose", "vote"]
+
+
+def test_client_report_collects_by_actor():
+    md = MetadataStore()
+    md.record_provenance(actor="c1", operation="local_train", subject="r0",
+                         outcome="update_posted")
+    md.record_provenance(actor="c1", operation="deploy_model", subject="d0",
+                         outcome="deployed")
+    md.record_provenance(actor="c2", operation="local_train", subject="r0",
+                         outcome="update_posted")
+    rep = client_report(md, "c1")
+    assert len(rep["operations"]) == 2
+    assert len(rep["trainings"]) == 1
+    assert len(rep["deployments"]) == 1
+
+
+def test_run_timeline_merges_and_orders_records():
+    md = seeded_store()
+    md.record_provenance(actor="scheduler", operation="admit_job",
+                         subject="run-1", outcome="admitted")
+    md.record_provenance(actor="c1", operation="local_train",
+                         subject="run-1/r0", outcome="update_posted")
+    md.record_provenance(actor="other", operation="admit_job",
+                         subject="run-2", outcome="admitted")
+    tl = run_timeline(md, "run-1")
+    sources = {e["source"] for e in tl["events"]}
+    assert sources == {"experiment", "provenance"}
+    subjects = [e.get("subject") for e in tl["events"]
+                if e["source"] == "provenance"]
+    assert subjects == ["run-1", "run-1/r0"]     # run-2 excluded
+    seqs = [e["seq"] for e in tl["events"]]
+    assert seqs == sorted(seqs)
+    assert tl["phases"] == []                    # no telemetry attached
