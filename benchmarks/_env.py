@@ -1,0 +1,47 @@
+"""Shared benchmark environment setup.
+
+Every bench that wants a multi-device host mesh on CPU must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* the
+first jax import — jax reads the flag once, at backend initialization.
+Import this module (or call ``force_host_devices``) at the very top of a
+bench, before anything that pulls in jax:
+
+    import _env  # noqa: F401   (defaults to 4 forced host devices)
+
+or, to pick the count:
+
+    from _env import force_host_devices
+    force_host_devices(8)
+
+The helper is a no-op when the user already exported their own
+``XLA_FLAGS`` (their choice wins) or when jax was already imported (then
+it warns loudly instead of silently benchmarking the wrong topology).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import warnings
+
+DEFAULT_HOST_DEVICES = 4
+
+
+def force_host_devices(n: int = DEFAULT_HOST_DEVICES) -> int:
+    """Ensure the process will see ``n`` host devices (CPU CI's stand-in
+    for a real accelerator mesh). Returns the device count that will be
+    in effect; respects a pre-existing user XLA_FLAGS."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        import jax
+        have = len(jax.devices())
+        if have < n:
+            warnings.warn(
+                f"jax already initialized with {have} device(s); "
+                f"force_host_devices({n}) must run before the first jax "
+                f"import to take effect", stacklevel=2)
+        return have
+    os.environ.setdefault("XLA_FLAGS", flag)
+    return n
+
+
+force_host_devices()

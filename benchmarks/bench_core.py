@@ -4,12 +4,18 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import sys
 import time
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _env import force_host_devices  # noqa: E402
+
+force_host_devices()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 _REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -96,7 +102,7 @@ def _time_s(fn, *args, n=1, warmup=1, **kw):
 
 def bench_masked_round(rows, *, n_params=10_000_000,
                        cohorts=(4, 16, 64), seed_baseline_cohort=16,
-                       write_json=True):
+                       stream_cohorts=(64, 128, 256), write_json=True):
     """Packed secure-agg data plane at >=10M params, cohorts 4/16/64.
 
     Per cohort: one client's full-buffer masking pass (the client hot path,
@@ -104,8 +110,17 @@ def bench_masked_round(rows, *, n_params=10_000_000,
     (N, T) -> (T,) reduction through the kernel ops path. The seed numpy
     masking is replayed once at ``seed_baseline_cohort`` for the speedup
     record written to BENCH_secure_agg.json.
+
+    The streaming section then folds ``stream_cohorts`` (up to 256)
+    through the O(T) accumulator sinks — single-device and, when >=2 JAX
+    devices are visible, T-axis mesh-sharded — recording aggregate wall
+    time, the peak accumulator working set (flat in cohort size by
+    construction) and the streamed-vs-stacked parity error. The stacked
+    path cannot even run at cohort 256 x 10M params (10GB materialized);
+    the stream path never holds more than batch+1 rows.
     """
-    from repro.core import secure_agg
+    from repro.core import secure_agg, streaming
+    from repro.sharding.agg import agg_mesh
 
     if seed_baseline_cohort not in cohorts:
         raise ValueError(
@@ -116,7 +131,14 @@ def bench_masked_round(rows, *, n_params=10_000_000,
                   "mask_s": "one client masking one packed buffer",
                   "aggregate_s": "server (N,T)->(T,) reduction, "
                                  "kernel ops path (jnp oracle fallback on "
-                                 "CPU interpret mode)"}}
+                                 "CPU interpret mode)",
+                  "stream_aggregate_s": "same reduction through the "
+                                        "streaming sink (fold-on-arrival, "
+                                        "O(T) accumulator), full fold "
+                                        "loop + finalize",
+                  "peak_accumulator_bytes": "sink working-set high-water "
+                                            "mark: accumulator + staged "
+                                            "rows; flat in cohort size"}}
     rng = np.random.default_rng(0)
     buf = rng.standard_normal(n_params, dtype=np.float32)
 
@@ -162,6 +184,59 @@ def bench_masked_round(rows, *, n_params=10_000_000,
     report["speedup_vs_seed_numpy_cohort16"] = t_seed / base_mask
     rows.append(("secure_agg.packed_vs_seed_speedup_c16",
                  t_seed / base_mask, "x faster (mask path)"))
+
+    # --- streaming accumulation: O(T) memory, cohorts up to 256 ---------
+    pool_n = streaming.DEFAULT_STREAM_BATCH
+    pool = [rng.standard_normal(n_params, dtype=np.float32)
+            for _ in range(pool_n)]
+    modes = {"1dev": None}
+    mesh = agg_mesh()
+    if mesh is not None:
+        modes["mesh"] = mesh
+    report["streaming"] = {"batch": pool_n,
+                           "devices": len(jax.devices()), "modes": {}}
+    for mode, m in modes.items():
+        per = {}
+        for c in stream_cohorts:
+            # warmup compiles the flush/finalize shapes for this mode
+            wsink = streaming.MaskedF32Sink(n_params, batch=pool_n, mesh=m)
+            for i in range(min(c, 2 * pool_n)):
+                wsink.fold(pool[i % pool_n])
+            wsink.finalize()
+            sink = streaming.MaskedF32Sink(n_params, batch=pool_n, mesh=m)
+            t0 = time.perf_counter()
+            for i in range(c):
+                sink.fold(pool[i % pool_n])
+            sink.finalize()
+            t = time.perf_counter() - t0
+            per[str(c)] = {"stream_aggregate_s": t,
+                           "peak_accumulator_bytes": sink.peak_bytes,
+                           "fold_batches": sink.fold_batches}
+            rows.append((f"secure_agg.stream_aggregate_c{c}_{mode}",
+                         t * 1e6,
+                         f"peak {sink.peak_bytes / 1e6:.0f}MB, "
+                         f"{sink.fold_batches} flushes"))
+        entry = {"cohorts": per}
+        cs = sorted(int(k) for k in per)
+        if len(cs) >= 2:
+            ts = [per[str(k)]["stream_aggregate_s"] for k in cs]
+            entry["scaling_exponent"] = float(
+                np.polyfit(np.log(cs), np.log(ts), 1)[0])
+        # parity vs the stacked kernel path at a size both can afford
+        tpar = min(n_params, 1_000_000)
+        cpar = min(stream_cohorts)
+        pbufs = [p[:tpar] for p in pool][: max(2, min(cpar, pool_n))]
+        ref = np.asarray(
+            secure_agg.aggregate_masked_packed(np.stack(pbufs)))
+        got = streaming.stream_masked_packed(pbufs, batch=3, mesh=m)
+        entry["stream_vs_stacked_max_abs_err"] = float(
+            np.abs(got - ref).max())
+        report["streaming"]["modes"][mode] = entry
+    e1 = report["streaming"]["modes"]["1dev"].get("scaling_exponent")
+    if e1 is not None:
+        report["stream_scaling_exponent_1dev"] = e1
+        rows.append(("secure_agg.stream_scaling_exponent_1dev", e1,
+                     "log-log slope over stream cohorts (1.0 = linear)"))
     if write_json:
         path = os.path.join(_REPO_ROOT, "BENCH_secure_agg.json")
         with open(path, "w") as f:
@@ -182,8 +257,17 @@ def bench_dropout_round(rows, *, n_params=5_000_000, cohorts=(4, 16, 64),
     the plain no-dropout reduction as the baseline the repair overhead is
     measured against. Ends with a bit-exactness check: the repaired
     survivor mean must match the plain survivor mean.
+
+    The streaming fields separate two honest numbers the stacked path
+    conflates. *Total work* for a repaired round is ~2x plain — an
+    information bound, corrections double the bytes folded. But the
+    protocol folds updates AND corrections on arrival, during the window
+    it is already waiting on the board, so the round-latency cost of
+    repair is the *commit path* only: the partial-batch flush + finalize
+    after the last arrival. ``stream_repair_overhead_x`` gates that
+    commit-path ratio (~1x, vs >5x for the stacked rebuild).
     """
-    from repro.core import secure_agg
+    from repro.core import secure_agg, streaming
 
     report = {"model_params": n_params, "n_dropped": n_dropped,
               "cohorts": {}, "notes": {
@@ -192,7 +276,18 @@ def bench_dropout_round(rows, *, n_params=5_000_000, cohorts=(4, 16, 64),
                   "aggregate_repaired_s": "(S, T) corrected reduction, "
                                           "kernel ops path",
                   "aggregate_plain_s": "no-dropout (S, T) reduction "
-                                       "baseline"}}
+                                       "baseline",
+                  "stream_aggregate_*_s": "streaming sink total work: "
+                                          "every fold + finalize "
+                                          "(repaired folds 2x the bytes "
+                                          "— information bound)",
+                  "stream_commit_*_s": "commit-path latency only: "
+                                       "partial flush + finalize after "
+                                       "the last on-arrival fold",
+                  "stream_repair_overhead_x": "commit repaired / commit "
+                                              "plain — what a round "
+                                              "actually pays for repair "
+                                              "under fold-on-arrival"}}
     rng = np.random.default_rng(0)
     buf = rng.standard_normal(n_params, dtype=np.float32)
     for c in cohorts:
@@ -217,6 +312,56 @@ def bench_dropout_round(rows, *, n_params=5_000_000, cohorts=(4, 16, 64),
                      f"{n_dropped} dropped"))
         rows.append((f"secure_agg.repaired_aggregate_c{c}", t_rep * 1e6,
                      f"{t_rep / max(t_plain, 1e-12):.2f}x plain"))
+
+        # --- streaming: total work vs commit-path latency ---------------
+        s = len(survivors)
+        pool_n = streaming.DEFAULT_STREAM_BATCH
+        spool = [rng.standard_normal(n_params, dtype=np.float32)
+                 for _ in range(pool_n)]
+
+        def fold_all(repaired, s=s):
+            sink = streaming.MaskedF32Sink(n_params, batch=pool_n,
+                                           mesh=None)
+            for i in range(s):
+                sink.fold(spool[i % pool_n])
+            if repaired:
+                for i in range(s):
+                    sink.fold_correction(spool[(i + 3) % pool_n])
+            return sink
+
+        fold_all(False).finalize()           # warmup: plain flush shapes
+        fold_all(True).finalize()            # warmup: repaired tail shape
+        t0 = time.perf_counter()
+        fold_all(False).finalize()
+        t_sp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        fold_all(True).finalize()
+        t_sr = time.perf_counter() - t0
+
+        def commit(repaired):
+            sink = fold_all(repaired)        # on-arrival folds, untimed
+            t0 = time.perf_counter()
+            sink.finalize()
+            return time.perf_counter() - t0
+
+        commit(False), commit(True)          # warmup partial-flush shapes
+        t_cp = commit(False)
+        t_cr = commit(True)
+        report["cohorts"][str(c)].update({
+            "stream_aggregate_plain_s": t_sp,
+            "stream_aggregate_repaired_s": t_sr,
+            "stream_total_repair_overhead_x": t_sr / max(t_sp, 1e-12),
+            "stream_commit_plain_s": t_cp,
+            "stream_commit_repaired_s": t_cr,
+            "stream_repair_overhead_x": t_cr / max(t_cp, 1e-12)})
+        rows.append((f"secure_agg.stream_commit_repaired_c{c}",
+                     t_cr * 1e6,
+                     f"{t_cr / max(t_cp, 1e-12):.2f}x plain commit "
+                     f"({t_sr / max(t_sp, 1e-12):.2f}x total work)"))
+
+    if "64" in report["cohorts"]:
+        report["stream_repair_overhead_x_cohort64"] = \
+            report["cohorts"]["64"]["stream_repair_overhead_x"]
 
     # --- repaired telescoping sanity: small cohort, real masks ----------
     t = min(n_params, 100_000)
@@ -329,7 +474,8 @@ def run_smoke(rows=None):
     bench_communicator(rows)
     bench_kernels(rows)
     bench_masked_round(rows, n_params=50_000, cohorts=(4,),
-                       seed_baseline_cohort=4, write_json=False)
+                       seed_baseline_cohort=4, stream_cohorts=(4, 12),
+                       write_json=False)
     bench_dropout_round(rows, n_params=50_000, cohorts=(4,),
                         write_json=False)
     bench_fl_round(rows)
@@ -338,7 +484,6 @@ def run_smoke(rows=None):
 
 if __name__ == "__main__":
     import argparse
-    import sys
     sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",

@@ -38,8 +38,12 @@ sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
 
 # Must land before the first jax import (pulled in lazily by repro.core):
 # the many-silo sweep runs hundreds of tiny jit programs on host — a few
-# forced host devices keep XLA's per-program autotuning cheap.
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+# forced host devices keep XLA's per-program autotuning cheap, and they
+# double as the aggregation mesh for the streaming server data plane.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _env import force_host_devices  # noqa: E402
+
+force_host_devices()
 
 
 ARCH = "fedforecast-100m"

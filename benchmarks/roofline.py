@@ -44,6 +44,64 @@ def roofline_table(recs, mesh="pod16x16", variant="baseline") -> str:
     return "\n".join(rows)
 
 
+# ---------------------------------------------------------------------------
+# aggregation-kernel roofline (analytic): the server combines are all
+# bandwidth-bound (< 1 flop/byte), which is exactly why the streaming
+# accumulator wins — the stacked path materializes (N, T) and then
+# re-streams it through HBM, the sink reads each row once on arrival and
+# keeps an O(T) working set. T-axis mesh sharding divides the per-chip
+# traffic by the shard count.
+# ---------------------------------------------------------------------------
+AGG_KERNELS = {
+    # name -> (bytes_in per (N,T) element, bytes_out per T element,
+    #          flops per (N,T) element)
+    "masked_sum": (4.0, 4.0, 2.0),              # f32 rows, fma
+    "masked_sum_corrected": (8.0, 4.0, 4.0),    # + correction rows
+    "dequant_reduce": (1.0 + 4.0 / 1024, 4.0, 3.0),   # int8 + chunk scales
+    "masked_dequant_reduce": (4.0, 4.0, 3.0),   # u32 residues, decode
+}
+
+
+def aggregation_roofline(n_params=10_000_000, cohorts=(64, 128, 256),
+                         n_shards=4, hw=None):
+    """Analytic roofline records for the four server combine kernels."""
+    if hw is None:
+        from repro.launch.mesh import HardwareModel
+        hw = HardwareModel()
+    recs = []
+    for name, (bin_, bout, flops_e) in AGG_KERNELS.items():
+        for c in cohorts:
+            byts = c * n_params * bin_ + n_params * bout
+            flops = c * n_params * flops_e
+            mem_s = byts / hw.hbm_bw
+            comp_s = flops / hw.peak_flops_bf16
+            recs.append({
+                "kernel": name, "cohort": c, "t": n_params,
+                "bytes": byts, "flops": flops,
+                "intensity_flops_per_byte": flops / byts,
+                "memory_s": mem_s, "compute_s": comp_s,
+                "dominant": "memory" if mem_s >= comp_s else "compute",
+                "memory_s_sharded": mem_s / n_shards,
+                "n_shards": n_shards,
+                "stream_working_set_bytes": 9 * n_params * 4.0,
+            })
+    return recs
+
+
+def aggregation_table(recs=None) -> str:
+    recs = aggregation_roofline() if recs is None else recs
+    rows = ["| kernel | cohort | GB moved | flops/byte | memory ms | "
+            f"sharded ms (x{recs[0]['n_shards']}) | dominant |",
+            "|" + "---|" * 7]
+    for r in recs:
+        rows.append(
+            f"| {r['kernel']} | {r['cohort']} | {r['bytes']/1e9:.1f} | "
+            f"{r['intensity_flops_per_byte']:.2f} | "
+            f"{fmt_ms(r['memory_s'])} | "
+            f"{fmt_ms(r['memory_s_sharded'])} | {r['dominant']} |")
+    return "\n".join(rows)
+
+
 def summarize(rows_out, out_dir="artifacts/dryrun"):
     recs = load_records(out_dir)
     ok = [r for r in recs if r["status"] == "ok"]
@@ -58,8 +116,19 @@ def summarize(rows_out, out_dir="artifacts/dryrun"):
             f"roofline.{r['arch']}.{r['shape']}",
             t["step_time_lower_bound_s"] * 1e6,
             f"dom={t['dominant'].replace('_s','')}"))
+    for r in aggregation_roofline():
+        if r["cohort"] != 64:
+            continue
+        rows_out.append((
+            f"roofline.agg.{r['kernel']}_c{r['cohort']}",
+            r["memory_s"] * 1e6,
+            f"{r['intensity_flops_per_byte']:.2f} flops/B, "
+            f"x{r['n_shards']} sharded {r['memory_s_sharded']*1e6:.0f}us"))
 
 
 if __name__ == "__main__":
     recs = load_records()
     print(roofline_table(recs))
+    print()
+    print("### Aggregation kernels (analytic, 10M params)")
+    print(aggregation_table())

@@ -69,8 +69,7 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.core.secure_agg import int_mask_offset, mask_modulus_bits
-from repro.kernels.compressed_agg.ops import (CHUNK, dequant_reduce,
-                                              masked_dequant_reduce)
+from repro.kernels.compressed_agg.ops import CHUNK
 
 SCHEMES = ("none", "topk", "int8")
 
@@ -238,53 +237,24 @@ def reduce_compressed(msgs: Sequence[Dict], weights: Sequence[float], *,
     """Weighted reduction of a cohort's wire messages -> dense (T,) f32.
 
     ``sum_i weights_i * decompress(msg_i)`` without ever stacking dense
-    per-client buffers: int8 cohorts ride the fused Pallas
-    dequantize-scale-accumulate kernel on the padded (N, T') int8 matrix
-    (jnp oracle in interpret mode); top-k cohorts accumulate weighted
-    (index, value) pairs into the output via fancy indexing (every
-    message's indices are unique by construction, so no ``np.add.at``).
-    Weights are used as given — the caller normalizes for a weighted
-    mean, exactly like ``secure_agg.aggregate_masked_packed``.
+    per-client buffers: int8 cohorts fold through the fused Pallas
+    dequantize-scale-accumulate kernel in bounded batches (a streaming
+    ``QuantSink``, ``core/streaming.py`` — O(T) accumulator memory, mesh-
+    sharded over T when a mesh is up; jnp oracle in interpret mode);
+    top-k cohorts accumulate weighted (index, value) pairs into the
+    output via fancy indexing (every message's indices are unique by
+    construction, so no ``np.add.at``). Weights are used as given — the
+    caller normalizes for a weighted mean, exactly like
+    ``secure_agg.aggregate_masked_packed``.
 
     ``return_norms=True`` additionally returns each client's l2 delta
     norm (``(out, [norm_i])``), computed from the already-decoded wire
     arrays in the same pass — the Evaluation Coordinator's update-norm
     measure without a second entropy-decode of the cohort.
     """
-    if not msgs:
-        raise ValueError("no compressed updates to reduce")
-    schemes = {m["scheme"] for m in msgs}
-    if len(schemes) > 1:
-        raise ValueError(f"mixed compression schemes in one cohort: "
-                         f"{sorted(schemes)}")
-    t = int(msgs[0]["size"])
-    if any(int(m["size"]) != t for m in msgs):
-        raise ValueError("compressed updates disagree on buffer size")
-    scheme = schemes.pop()
-    w = np.asarray(weights, np.float32)
-    if scheme == "topk":
-        out = np.zeros(t, np.float32)
-        norms = []
-        for m, wi in zip(msgs, w):
-            val = np.asarray(m["val"], np.float32)
-            out[np.asarray(m["idx"], np.int64)] += wi * val
-            norms.append(float(np.linalg.norm(val.astype(np.float64))))
-        return (out, norms) if return_norms else out
-    pad = (-t) % CHUNK
-    q = np.stack([np.pad(quantized_values(m), (0, pad)) for m in msgs])
-    scales = np.stack([np.asarray(m["scales"], np.float32) for m in msgs])
-    out = np.asarray(dequant_reduce(q, scales, w, interpret=interpret),
-                     np.float32)[:t]
-    if not return_norms:
-        return out
-    # ||deq_i||^2 = sum_c scales_ic^2 * ||q_i,chunk c||^2 — per-chunk
-    # energies off the already-decoded int8 matrix. f32 squares are exact
-    # here (|q| <= 127, so a chunk's squared sum stays < 2^24) and keep
-    # the transient at 4 bytes/value instead of a dense f64 expansion.
-    qsq = (q.astype(np.float32) ** 2).reshape(len(msgs), -1, CHUNK).sum(
-        -1, dtype=np.float64)
-    norms = np.sqrt((qsq * scales.astype(np.float64) ** 2).sum(-1))
-    return out, [float(n) for n in norms]
+    from repro.core import streaming
+    return streaming.stream_reduce_compressed(
+        msgs, weights, return_norms=return_norms, interpret=interpret)
 
 
 def reduce_masked(msgs: Sequence[Dict], *,
@@ -292,44 +262,24 @@ def reduce_masked(msgs: Sequence[Dict], *,
                   interpret: Optional[bool] = None) -> np.ndarray:
     """Decode a masked cohort's wire messages -> dense (T,) f32 *sum*.
 
-    One modular integer sum over the stacked (N, T') residue matrix
-    (fused masked dequantize kernel; jnp oracle in interpret mode): the
-    pairwise masks cancel bit-exactly under the wrap-around sum, the
-    residue is centered and scaled by the cohort-common grid. No weights
-    — clients pre-scale before quantization, exactly like the packed
-    fp32 secure plane; the caller divides by the cohort's total weight.
+    Streams the cohort's residue arrays into a (T',) uint32 accumulator
+    (``core/streaming.py`` ``ModularSink``) in bounded batches — the
+    (N, T') stack never materializes — then one fused masked-dequantize
+    decode at the end (jnp oracle in interpret mode). uint32 wrap-around
+    preserves residues mod M = 2**mbits, so the fold is associative and
+    the result is BIT-EXACT regardless of arrival order: the pairwise
+    masks cancel exactly, the residue is centered and scaled by the
+    cohort-common grid. No weights — clients pre-scale before
+    quantization, exactly like the packed fp32 secure plane; the caller
+    divides by the cohort's total weight.
 
     ``corrections``: per-survivor integer repair streams
     (``secure_agg.int_repair_correction``), aligned with ``msgs``,
     subtracted mod M before the decode after a dropout.
     """
-    if not msgs:
-        raise ValueError("no masked updates to reduce")
-    if any(m["scheme"] != "masked_int8" for m in msgs):
-        raise ValueError("reduce_masked needs masked_int8 wire dicts")
-    t = int(msgs[0]["size"])
-    mbits = int(msgs[0]["mbits"])
-    grid = float(msgs[0]["grid"])
-    for m in msgs:
-        if (int(m["size"]) != t or int(m["mbits"]) != mbits
-                or float(m["grid"]) != grid):
-            raise ValueError(
-                "masked updates disagree on the shared coding contract "
-                "(size / mask modulus / quantization grid)")
-    z = np.stack([np.asarray(m["z"]).astype(np.uint32) for m in msgs])
-    tp = z.shape[1]
-    corr = None
-    if corrections is not None:
-        corr = np.stack([np.asarray(c).astype(np.uint32)
-                         for c in corrections])
-        if corr.shape != z.shape:
-            raise ValueError(
-                f"repair corrections shape {corr.shape} does not match "
-                f"the masked stream shape {z.shape}")
-    scales = np.full(tp // CHUNK, np.float32(grid), np.float32)
-    out = masked_dequant_reduce(z, scales, modulus_bits=mbits, corr=corr,
-                                interpret=interpret)
-    return np.asarray(out, np.float32)[:t]
+    from repro.core import streaming
+    return streaming.stream_reduce_masked(msgs, corrections=corrections,
+                                          interpret=interpret)
 
 
 def dp_sigma_total(epsilon: float, delta: float, clip: float) -> float:

@@ -281,31 +281,58 @@ def publish_dropout(server, base: str, dropped_round: List[str]):
 
 class CollectPhase(Phase):
     """Poll the cohort's round updates; aggregate when complete, or open a
-    mask-repair round when a masked cohort lost members mid-collect."""
+    mask-repair round when a masked cohort lost members mid-collect.
+
+    Streaming collect (DESIGN.md §Sharded streaming aggregation): each
+    update is decrypted once — on the tick it lands — its scalars
+    (n_examples, train_loss) are kept, and its heavy payload is folded
+    straight into an O(T) accumulator sink (``core/streaming.py``) and
+    dropped. The server never holds the (N, T) cohort; only the plain
+    pytree plane (median/trimmed-mean need the full set) retains updates.
+    """
 
     name = "collect"
+
+    @staticmethod
+    def _fresh_stream():
+        return {"seen": set(), "sizes": {}, "losses": {}, "updates": None}
+
+    def enter(self, server):
+        server.run.proto["collect_stream"] = self._fresh_stream()
 
     def poll(self, server):
         r = server.run
         r.phase_ticks += 1
         base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
-        msgs = server._poll_cohort(lambda cid: f"{base}/update/{cid}",
-                                   "round_update")
-        if msgs is None:
-            return None
-        # compressed rounds (masked-quantized included) post a wire dict,
-        # plain masked rounds one packed fp32 buffer, plain rounds a
-        # pytree; key by the job's data plane so a mismatched client
-        # fails loudly here at the collect boundary
-        updates = {c: (m["comp"] if r.job.compression != "none"
+        st = r.proto.setdefault("collect_stream", self._fresh_stream())
+
+        def arrive(cid, m):
+            # compressed rounds (masked-quantized included) post a wire
+            # dict, plain masked rounds one packed fp32 buffer, plain
+            # rounds a pytree; key by the job's data plane so a
+            # mismatched client fails loudly here at the collect boundary
+            payload = (m["comp"] if r.job.compression != "none"
                        else m["packed"] if r.job.secure_aggregation
-                       else m["params"]) for c, m in msgs.items()}
-        sizes = {c: m["n_examples"] for c, m in msgs.items()}
-        losses = {c: m["train_loss"] for c, m in msgs.items()}
+                       else m["params"])
+            st["sizes"][cid] = m["n_examples"]
+            st["losses"][cid] = m["train_loss"]
+            st["updates"] = server._fold_update(
+                st["updates"], cid, payload, m["n_examples"])
+
+        done = server._poll_cohort(lambda cid: f"{base}/update/{cid}",
+                                   "round_update",
+                                   on_arrival=arrive, seen=st["seen"])
+        if not done:
+            return None
+        r.proto.pop("collect_stream", None)
+        updates = st["updates"] if st["updates"] is not None else {}
+        sizes = {c: st["sizes"][c] for c in r.cohort}
+        losses = {c: st["losses"][c] for c in r.cohort}
         dropped_round = [c for c in r.round_cohort if c not in r.cohort]
         if r.job.secure_aggregation and dropped_round:
             # survivors' buffers still carry masks toward the dropped
-            # peers; stash the collect and run a mask-repair round
+            # peers; stash the collect (the sink, not the buffers — those
+            # are gone) and run a mask-repair round
             r.pending_round = {"updates": updates, "sizes": sizes,
                                "losses": losses}
             publish_dropout(server, base, dropped_round)
@@ -328,34 +355,86 @@ class RepairPhase(Phase):
 
     name = "repair"
 
+    def enter(self, server):
+        server.run.proto.pop("repair_stream", None)
+
     def poll(self, server):
+        from repro.core import streaming
         r = server.run
         r.phase_ticks += 1
         base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        pending = r.pending_round
+        sink_updates = (pending["updates"] if isinstance(
+            pending["updates"], streaming.StreamedUpdates) else None)
+        st = r.proto.setdefault(
+            "repair_stream", {"seen": set(), "epoch": r.repair_epoch})
+        if st["epoch"] != r.repair_epoch:
+            # the dropout set grew after corrections were folded: every
+            # old-epoch correction targets the wrong dropout set — back
+            # each one out of the accumulator (its payload is still
+            # posted under the old epoch path; round GC runs at commit)
+            if sink_updates is not None:
+                for cid in sorted(st["seen"]):
+                    m = server.comm.collect(
+                        f"{base}/repair/{st['epoch']}/{cid}", cid)
+                    sink_updates.sink.unfold_correction(m["correction"])
+            st["seen"] = set()
+            st["epoch"] = r.repair_epoch
         n_before = len(r.cohort)
-        msgs = server._poll_cohort(
-            lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
-            "mask_repair")
+        if sink_updates is not None:
+            # corrections stream like updates do in collect: decrypted
+            # once on arrival, folded into the pending sink, dropped —
+            # the aggregation-commit path is left with flush + finalize
+            def arrive(cid, m):
+                sink_updates.sink.fold_correction(m["correction"])
+
+            done = server._poll_cohort(
+                lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
+                "mask_repair", on_arrival=arrive, seen=st["seen"])
+        else:
+            # legacy dict-shaped pending (tests drive this): lazy mapping,
+            # each correction decrypted when its fold batch stages it
+            done = server._poll_cohort(
+                lambda cid: f"{base}/repair/{r.repair_epoch}/{cid}",
+                "mask_repair", lazy=True)
         if r.phase == "paused":
             return None
         if len(r.cohort) != n_before:
             # the dropout set grew mid-repair: corrections already posted
             # (even a complete set) target the old dropout set — bump the
-            # epoch and ask the remaining survivors again
+            # epoch and ask the remaining survivors again (the epoch
+            # mismatch above unfolds anything already folded, next tick)
             publish_dropout(
                 server, base,
                 [c for c in r.round_cohort if c not in r.cohort])
             r.phase_ticks = 0
             return None
-        if msgs is None:
+        if done is None:
             return None
-        pending = r.pending_round
+        r.proto.pop("repair_stream", None)
         r.pending_round = None
+        if sink_updates is not None:
+            # survivors that were folded during collect and dropped
+            # mid-repair get backed out of the accumulator: their posted
+            # update is still on the board (round GC runs at commit), so
+            # refetch and unfold; the new epoch's corrections cancel the
+            # masks the remaining survivors still carry toward them
+            def refetch(cid):
+                m = server.comm.collect(f"{base}/update/{cid}", cid)
+                return (m["comp"] if r.job.compression != "none"
+                        else m["packed"])
+
+            sink_updates.restrict_to(r.cohort, refetch)
+            updates = sink_updates
+            corrections = streaming.CORRECTIONS_FOLDED
+        else:
+            updates = {c: pending["updates"][c] for c in r.cohort}
+            corrections = streaming.LazyView(done, "correction")
         server._aggregate_and_advance(
-            {c: pending["updates"][c] for c in r.cohort},
+            updates,
             {c: pending["sizes"][c] for c in r.cohort},
             {c: pending["losses"][c] for c in r.cohort},
-            corrections={c: m["correction"] for c, m in msgs.items()})
+            corrections=corrections)
         return None                   # _aggregate_and_advance transitioned
 
     def wait_paths(self, server):

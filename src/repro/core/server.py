@@ -39,7 +39,6 @@ import numpy as np
 import jax
 
 from repro.checkpoint import pytree_digest
-from repro.core import secure_agg
 from repro.core.aggregation import aggregate
 from repro.core.packing import PackedLayout, unpack_pytree
 from repro.core.clients import ClientManagement
@@ -361,7 +360,8 @@ class FLServer:
                 details={"reason": r.pause_reason,
                          "dropped": list(r.dropped)})
 
-    def _poll_cohort(self, path_for, waiting_for: str) -> Optional[Dict]:
+    def _poll_cohort(self, path_for, waiting_for: str, *,
+                     on_arrival=None, seen=None, lazy: bool = False):
         """One poll cycle over a per-client resource, with the deadline.
 
         Probes presence via one batched ``board.stat_many`` sweep (a
@@ -369,100 +369,223 @@ class FLServer:
         decrypted while stragglers are outstanding (a masked update is
         tens of MB; decrypting the whole cohort on every poll tick would
         dwarf the actual aggregation). Enforces the phase deadline on the
-        missing set, and decrypts exactly once: when every *surviving*
-        cohort member has posted. Returns ``{cid: payload}`` then, else
-        ``None`` (still waiting, or the run just paused).
+        missing set. Three completion modes:
+
+        * default — decrypt exactly once, when every *surviving* cohort
+          member has posted: returns ``{cid: payload}``, else ``None``
+          (still waiting, or the run just paused);
+        * ``on_arrival`` — streaming collect (DESIGN.md §Sharded
+          streaming aggregation): each *newly posted* payload is
+          decrypted once, on the tick it lands, and handed to the
+          callback so the phase can fold it into an O(T) accumulator and
+          drop it; ``seen`` (caller-persisted set) tracks who was
+          surfaced. Returns ``True`` when the surviving cohort is fully
+          surfaced, else ``None`` — the payloads were already streamed
+          out, there is nothing left to return;
+        * ``lazy`` — returns a decrypt-on-access mapping over the
+          surviving cohort instead of eagerly materializing every
+          payload (the repair fold consumes corrections in bounded
+          batches).
         """
         r = self.run
         metas = self.board.stat_many([path_for(cid) for cid in r.cohort])
         missing = [cid for cid in r.cohort if metas[path_for(cid)] is None]
+        if on_arrival is not None:
+            # posted clients are never dropped (deadlines act on the
+            # missing set only), so folding before the deadline check is
+            # safe — nothing folded here can leave the cohort this tick
+            for cid in list(r.cohort):
+                if cid not in seen and metas[path_for(cid)] is not None:
+                    on_arrival(cid, self.comm.collect(path_for(cid), cid))
+                    seen.add(cid)
         if missing:
             self._enforce_deadline(missing, waiting_for)
             if r.phase == "paused":
                 return None
             if any(cid in missing for cid in r.cohort):
                 return None              # keep polling live stragglers
+        if on_arrival is not None:
+            return True                  # payloads already streamed out
+        if lazy:
+            from repro.core import streaming
+            return streaming.LazyCohort(
+                self.comm, {cid: path_for(cid) for cid in r.cohort})
         return {cid: self.comm.collect(path_for(cid), cid)
                 for cid in r.cohort}
+
+    def _fold_update(self, container, cid: str, payload, weight: float):
+        """Route one client's round payload into the round's aggregation
+        container the moment it arrives (streaming collect). The packed
+        and compressed planes fold into an O(T) streaming sink
+        (``core/streaming.py``) and the heavy buffer is dropped; the
+        plain pytree plane keeps a dict — median/trimmed-mean need the
+        full update set, so it stays on the legacy retained path."""
+        from repro.core import streaming
+        r = self.run
+        job = r.job
+        if job.secure_aggregation and job.compression != "none":
+            contract = (int(payload["size"]), int(payload["mbits"]),
+                        float(payload["grid"]))
+            if container is None:
+                sink = streaming.ModularSink(
+                    contract[0], mbits=contract[1], grid=contract[2],
+                    telemetry=self.telemetry, run_id=r.run_id)
+                container = streaming.StreamedUpdates(sink, "masked_int")
+                container.contract = contract
+            elif (payload.get("scheme") != "masked_int8"
+                  or contract != container.contract):
+                # same loud failure as the stacked reduce_masked
+                raise ValueError(
+                    "masked updates disagree on the shared coding "
+                    "contract (size / mask modulus / quantization grid)")
+            container.sink.fold(payload["z"])
+            container.note_folded(cid)
+            return container
+        if job.secure_aggregation:
+            buf = np.asarray(payload, np.float32).reshape(-1)
+            if container is None:
+                sink = streaming.MaskedF32Sink(
+                    buf.shape[0], telemetry=self.telemetry, run_id=r.run_id)
+                container = streaming.StreamedUpdates(sink, "masked_f32")
+            container.sink.fold(buf, 1.0)
+            container.note_folded(cid)
+            return container
+        if job.compression != "none":
+            from repro.core.compression import quantized_values
+            scheme = payload.get("scheme")
+            t = int(payload["size"])
+            if container is None:
+                sink = (streaming.TopkSink(t) if scheme == "topk"
+                        else streaming.QuantSink(
+                            t, telemetry=self.telemetry, run_id=r.run_id))
+                container = streaming.StreamedUpdates(
+                    sink, f"compressed_{scheme}")
+            elif container.plane != f"compressed_{scheme}":
+                raise ValueError(
+                    f"mixed compression schemes in one cohort: "
+                    f"{sorted({container.plane.split('_', 1)[1], scheme})}")
+            elif t != container.sink.t:
+                raise ValueError(
+                    "compressed updates disagree on buffer size")
+            if scheme == "topk":
+                container.sink.fold(cid, payload["idx"], payload["val"],
+                                    weight)
+            else:
+                container.sink.fold(cid, quantized_values(payload),
+                                    payload["scales"], weight)
+            container.note_folded(cid)
+            return container
+        container = container if container is not None else {}
+        container[cid] = payload
+        return container
 
     # --- Model Aggregator ---------------------------------------------
     def _aggregate_and_advance(self, updates, sizes, losses,
                                corrections=None):
+        from repro.core import streaming
         r = self.run
         job = r.job
         cids = sorted(updates)
-        ups = [updates[c] for c in cids]
+        streamed = isinstance(updates, streaming.StreamedUpdates)
         old_params = self.store.get(r.global_digest)
         if job.secure_aggregation and job.compression != "none":
             # masked-quantized plane (DESIGN.md §Composable privacy): the
-            # cohort posted integer residue streams mod 2**mbits. One
-            # modular sum (fused masked dequantize kernel; dropout
-            # corrections subtracted mod M first) cancels the pairwise
-            # masks bit-exactly, the centered residue is scaled by the
+            # cohort posted integer residue streams mod 2**mbits. The
+            # modular sum (streamed into a (T,) uint32 accumulator —
+            # uint32 wrap preserves residues, so the fold order is
+            # irrelevant and the result is bit-exact vs the stacked
+            # reduce; dropout corrections subtracted mod M) cancels the
+            # pairwise masks, the centered residue is scaled by the
             # cohort-common grid and — like the fp32 masked plane —
             # divided by the survivors' total pre-scaled weight: exact
             # weighted FedAvg over base + mean delta.
-            from repro.core import compression
             layout = PackedLayout.for_tree(old_params)
-            corr = ([corrections[c] for c in cids]
-                    if corrections is not None else None)
             denom = float(sum(sizes[c] for c in cids)) / float(
                 job.local_steps * job.batch_size)
             with self.telemetry.kernel_span(
                     "masked_dequant_reduce", run_id=r.run_id,
                     scheme="secure+compressed", cohort=str(len(cids))):
-                total = compression.reduce_masked(
-                    [updates[c] for c in cids], corrections=corr)
+                if streamed:
+                    if (corrections is not None and corrections
+                            is not streaming.CORRECTIONS_FOLDED):
+                        for c in cids:
+                            updates.sink.fold_correction(corrections[c])
+                    total = updates.sink.finalize()
+                else:
+                    corr = ((corrections[c] for c in cids)
+                            if corrections is not None else None)
+                    total = streaming.stream_reduce_masked(
+                        (updates[c] for c in cids), corrections=corr,
+                        telemetry=self.telemetry, run_id=r.run_id)
             mean_delta = unpack_pytree(total / np.float32(denom), layout)
             new_global = jax.tree.map(
                 lambda p, dlt: np.asarray(p, np.float32)
                 + np.asarray(dlt, np.float32).reshape(np.shape(p)),
                 old_params, mean_delta)
         elif job.secure_aggregation:
-            # packed data plane: masked (T,) buffers -> one fused reduction
-            # (dropout corrections folded in after a repair round), then a
-            # single unpack into the parameter structure. Clients pre-scale
-            # by n_examples/weight_denom before masking, so the uniform sum
-            # divided by the survivors' total scaled weight is exact
-            # weighted FedAvg (masks only telescope under equal weights).
+            # packed data plane: masked (T,) buffers folded into a (T,)
+            # f32 accumulator as they arrived (dropout corrections fold
+            # as negative-weight rows after a repair round), then a
+            # single unpack into the parameter structure. Clients
+            # pre-scale by n_examples/weight_denom before masking, so the
+            # uniform sum divided by the survivors' total scaled weight
+            # is exact weighted FedAvg (masks only telescope under equal
+            # weights).
             layout = PackedLayout.for_tree(old_params)
-            stacked = np.stack([np.asarray(u, np.float32) for u in ups])
-            corr = (np.stack([np.asarray(corrections[c], np.float32)
-                              for c in cids])
-                    if corrections is not None else None)
             denom = float(sum(sizes[c] for c in cids)) / float(
                 job.local_steps * job.batch_size)
             with self.telemetry.kernel_span(
                     "masked_sum", run_id=r.run_id, scheme="secure",
                     cohort=str(len(cids))):
-                total = secure_agg.aggregate_masked_packed(
-                    stacked, np.ones(len(cids), np.float32),
-                    corrections=corr)
+                if streamed:
+                    if (corrections is not None and corrections
+                            is not streaming.CORRECTIONS_FOLDED):
+                        for c in cids:
+                            updates.sink.fold_correction(
+                                np.asarray(corrections[c], np.float32))
+                    total = updates.sink.finalize()
+                else:
+                    corr = ((corrections[c] for c in cids)
+                            if corrections is not None else None)
+                    total = streaming.stream_masked_packed(
+                        (updates[c] for c in cids),
+                        np.ones(len(cids), np.float32), corrections=corr,
+                        telemetry=self.telemetry, run_id=r.run_id)
             new_global = unpack_pytree(total / denom, layout)
         elif job.compression != "none":
             # compressed data plane: clients posted lossy-coded packed
-            # *deltas* (wire dicts). One fused dequantize-scale-accumulate
-            # over the cohort (Pallas kernel on TPU, jnp oracle in
-            # interpret mode for int8; weighted scatter-add for topk),
-            # then a single unpack — base + weighted-mean delta is the
-            # same weighted FedAvg, since sum_i w_i (base + d_i) =
-            # base + sum_i w_i d_i under normalized weights.
-            from repro.core import compression
+            # *deltas* (wire dicts), folded through the fused
+            # dequantize-scale-accumulate kernel in bounded batches with
+            # raw example counts as weights (weighted scatter-add for
+            # topk); dividing the accumulated sum by the total weight at
+            # the end is the same weighted FedAvg — normalization
+            # commutes with the sum.
             layout = PackedLayout.for_tree(old_params)
-            w = np.asarray([sizes[c] for c in cids], np.float64)
-            w = (w / w.sum()).astype(np.float32)
             with self.telemetry.kernel_span(
                     "dequant_reduce", run_id=r.run_id, scheme="compressed",
                     cohort=str(len(cids))):
-                total, delta_norms = compression.reduce_compressed(
-                    [updates[c] for c in cids], w, return_norms=True)
+                if streamed:
+                    sink = updates.sink
+                    tw = sink.total_weight or 1.0
+                    total = sink.finalize() / np.float32(tw)
+                    comp_norms = {c: sink.norms[c] for c in cids}
+                else:
+                    w = np.asarray([sizes[c] for c in cids], np.float64)
+                    w = (w / w.sum()).astype(np.float32)
+                    total, delta_norms = streaming.stream_reduce_compressed(
+                        (updates[c] for c in cids), w, return_norms=True,
+                        telemetry=self.telemetry, run_id=r.run_id)
+                    comp_norms = dict(zip(cids, delta_norms))
             mean_delta = unpack_pytree(total, layout)
             new_global = jax.tree.map(
                 lambda p, d: np.asarray(p, np.float32)
                 + np.asarray(d, np.float32).reshape(np.shape(p)),
                 old_params, mean_delta)
-            comp_norms = dict(zip(cids, delta_norms))
         else:
+            # plain pytree plane: median / trimmed-mean need the full
+            # update set, so this is the one plane that retains the
+            # cohort's updates (collect keeps a dict here, never a sink)
+            ups = [updates[c] for c in cids]
             weights = ([sizes[c] for c in cids]
                        if job.aggregation == "fedavg" else None)
             new_global = aggregate(job.aggregation, ups, weights)

@@ -1,0 +1,684 @@
+"""Streaming, O(T) server-side aggregation (DESIGN.md §Sharded streaming
+aggregation).
+
+The seed server materialized the whole cohort before reducing it — an
+(N, T) stack per round (2.5GB at cohort 64 x 10M params, and 2x that in a
+repair round) that made aggregation cost scale with cohort size in
+*memory*, not just compute. This module replaces the stack with
+fixed-size accumulator sinks that fold updates in bounded batches the
+moment the collect machinery surfaces them:
+
+* ``MaskedF32Sink`` — the packed fp32 secure plane: a (T,) f32
+  accumulator; every ``stream_batch`` buffers are stacked into one
+  (B, T) slab, reduced through the ``masked_sum`` kernel trio (mesh-
+  sharded over T when a mesh is up, ``sharding/agg.py``) and added into
+  the accumulator with a donated buffer (``jax.jit(...,
+  donate_argnums=0)``) — steady-state memory is O(T + B*T), independent
+  of cohort size. Repair corrections fold as negative-weight rows;
+  reordering an fp32 sum moves it only at rounding level (the e2e twin
+  bound stays 1e-4).
+* ``ModularSink`` — the masked-quantized integer plane: a (T',) uint32
+  accumulator of residues mod M = 2**mbits. Batches fold via wrap-around
+  adds (M divides 2**32, so uint32 wrap preserves residues — the fold is
+  associative and commutative, hence BIT-EXACT under any arrival order);
+  corrections subtract mod M; one ``masked_dequant_reduce`` decodes the
+  accumulator at finalize.
+* ``QuantSink`` — the plain compressed int8 plane: batches fold through
+  ``dequant_reduce`` with the clients' raw example counts as weights; the
+  caller divides by the total weight at the end (same mean, no need to
+  know the cohort's total up front). Per-client delta norms fall out of
+  each fold for the contribution measure.
+* ``TopkSink`` — sparse (index, value) scatter-adds, already O(T).
+
+Every sink exposes ``unfold`` — fold with inverted sign — so a client
+that was folded during collect and *then* dropped mid-repair can be
+backed out of the accumulator (the board still holds its posted update
+until commit-time GC; the protocol refetches and unfolds, then the next
+repair epoch's corrections cancel the remaining orphaned masks).
+
+Telemetry (DESIGN.md §Observability): each flush runs under a
+``kernel_span`` (``<kernel>_stream``), bumps the
+``agg.stream_fold_batches`` counter and folds its working-set high-water
+mark into the ``agg.accumulator_peak_bytes`` gauge — all visible in
+``fleet_report`` via the metrics registry.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Callable, Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compressed_agg.ops import (CHUNK, dequant_reduce,
+                                              masked_dequant_reduce)
+from repro.kernels.secure_agg.ops import masked_sum
+from repro.sharding import agg as _shard
+
+DEFAULT_STREAM_BATCH = 8
+
+GAUGE_PEAK_BYTES = "agg.accumulator_peak_bytes"
+COUNTER_FOLD_BATCHES = "agg.stream_fold_batches"
+
+
+class _CorrectionsFolded:
+    """Sentinel: the repair phase already streamed the corrections into
+    the pending sink (fold-on-arrival), so the aggregate step must not
+    fold them again — but the round still commits as repaired."""
+
+    def __repr__(self):
+        return "<corrections already folded>"
+
+
+CORRECTIONS_FOLDED = _CorrectionsFolded()
+
+
+def default_mesh():
+    """The aggregation mesh streaming uses when the caller passes
+    ``mesh="auto"``: all local devices, or ``None`` on a single-device
+    host (then every fold runs the plain op — same math)."""
+    return _shard.agg_mesh()
+
+
+def _resolve_mesh(mesh):
+    return default_mesh() if mesh == "auto" else mesh
+
+
+# --- donated accumulator folds: the accumulator buffer is reused in
+# place, so the steady-state footprint stays one (T,) buffer ------------
+@lru_cache(maxsize=None)
+def _acc_add():
+    return jax.jit(lambda acc, s: acc + s, donate_argnums=(0,))
+
+
+@lru_cache(maxsize=None)
+def _acc_fold_u32(subtract: bool):
+    if subtract:
+        return jax.jit(
+            lambda acc, z: acc - jnp.sum(z, axis=0, dtype=jnp.uint32),
+            donate_argnums=(0,))
+    return jax.jit(
+        lambda acc, z: acc + jnp.sum(z, axis=0, dtype=jnp.uint32),
+        donate_argnums=(0,))
+
+
+class _SinkBase:
+    """Shared staging/flush/telemetry machinery of the streaming sinks."""
+
+    plane = "?"
+
+    def __init__(self, t: int, *, batch: int = DEFAULT_STREAM_BATCH,
+                 mesh="auto", interpret: Optional[bool] = None,
+                 telemetry=None, run_id: Optional[str] = None):
+        if t <= 0:
+            raise ValueError("sink needs a positive buffer size")
+        self.t = int(t)
+        self.batch = max(1, int(batch))
+        self.mesh = _resolve_mesh(mesh)
+        self.interpret = interpret
+        self.telemetry = telemetry
+        self.run_id = run_id
+        self.n_folded = 0            # net clients folded (unfolds subtract)
+        self.fold_batches = 0
+        self.peak_bytes = 0
+        self._staging: list = []
+        self._finalized = False
+
+    # -- telemetry ------------------------------------------------------
+    def _span(self, kernel: str):
+        if self.telemetry is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return self.telemetry.kernel_span(
+            f"{kernel}_stream", run_id=self.run_id, plane=self.plane,
+            cohort=str(self.n_folded))
+
+    def _note_flush(self, staged_bytes: int):
+        self.fold_batches += 1
+        self.peak_bytes = max(self.peak_bytes,
+                              self.accumulator_bytes + staged_bytes)
+        if self.telemetry is not None:
+            m = self.telemetry.metrics
+            m.counter(COUNTER_FOLD_BATCHES, plane=self.plane).inc()
+            g = m.gauge(GAUGE_PEAK_BYTES, plane=self.plane)
+            g.set(max(g.read(), self.peak_bytes))
+
+    @property
+    def accumulator_bytes(self) -> int:
+        raise NotImplementedError
+
+    # -- folding --------------------------------------------------------
+    def _stage(self, item):
+        if self._finalized:
+            raise RuntimeError("sink already finalized")
+        self._staging.append(item)
+        if len(self._staging) >= self.batch:
+            self._flush()
+
+    def _flush(self):
+        if not self._staging:
+            return
+        staged, self._staging = self._staging, []
+        staged_bytes = sum(self._row_bytes(s) for s in staged)
+        self._reduce(staged)
+        self._note_flush(staged_bytes)
+
+    def _row_bytes(self, item) -> int:
+        raise NotImplementedError
+
+    def _reduce(self, staged):
+        raise NotImplementedError
+
+    def finalize(self):
+        raise NotImplementedError
+
+
+class MaskedF32Sink(_SinkBase):
+    """Streaming twin of ``secure_agg.aggregate_masked_packed``: folds
+    (T,) fp32 masked buffers (weight +1) and repair corrections (weight
+    -1) into one (T,) f32 accumulator. ``finalize()`` returns the cohort
+    *sum* — the caller divides by the survivors' total pre-scaled weight
+    exactly as on the stacked path."""
+
+    plane = "masked_f32"
+
+    def __init__(self, t: int, **kw):
+        super().__init__(t, **kw)
+        # mesh runs: keep the accumulator padded and P("shard")-sharded
+        # across its whole life, so per-flush folds never reshard
+        self.tp = (t + _shard._t_pad(t, self.mesh.shape[_shard.AXIS],
+                                     _shard.LANE)
+                   if self.mesh is not None else t)
+        self._acc = None             # lazy: allocated by the first flush
+
+    @property
+    def accumulator_bytes(self) -> int:
+        return 4 * self.tp
+
+    def fold(self, buf, weight: float = 1.0):
+        buf = np.asarray(buf, np.float32).reshape(-1)
+        if buf.shape[0] != self.t:
+            raise ValueError(
+                f"buffer size {buf.shape[0]} != sink size {self.t}")
+        self._stage((buf, np.float32(weight)))
+        self.n_folded += 1 if weight > 0 else -1
+
+    def unfold(self, buf, weight: float = 1.0):
+        """Back a folded client out (mid-repair dropout)."""
+        self.fold(buf, -weight)
+
+    def fold_correction(self, buf, weight: float = 1.0):
+        """sum_i w_i*(x_i - c_i) == sum_i w_i*x_i - sum_i w_i*c_i: the
+        repair subtraction as a negative-weight fold, so corrections
+        stream exactly like updates instead of forcing a second (N, T)
+        materialization next to the first."""
+        n = self.n_folded
+        self.fold(buf, -weight)
+        self.n_folded = n            # corrections are not cohort members
+
+    def unfold_correction(self, buf, weight: float = 1.0):
+        """Back out a correction that became stale (the dropout set grew
+        mid-repair, invalidating the old epoch's corrections)."""
+        self.fold_correction(buf, -weight)
+
+    def _row_bytes(self, item) -> int:
+        return item[0].nbytes
+
+    def _reduce(self, staged):
+        ws = np.asarray([w for _, w in staged], np.float32)
+        # (B, T'): B is the bounded batch — the only cohort-shaped
+        # transient, and its width is fixed by ``stream_batch``
+        if self.tp == self.t:
+            x = np.stack([b for b, _ in staged])   # one memcpy, no memset
+        else:
+            x = np.zeros((len(staged), self.tp), np.float32)
+            for i, (b, _) in enumerate(staged):
+                x[i, :self.t] = b
+        with self._span("masked_sum"):
+            if self.mesh is not None:
+                s = _shard.sharded_masked_sum(x, ws, mesh=self.mesh,
+                                              interpret=self.interpret)
+            else:
+                s = masked_sum(jnp.asarray(x), jnp.asarray(ws),
+                               interpret=self.interpret)
+            if self._acc is None:
+                self._acc = s
+            else:
+                self._acc = _acc_add()(self._acc, s)
+            self._acc.block_until_ready()
+
+    def finalize(self) -> np.ndarray:
+        self._flush()
+        self._finalized = True
+        if self._acc is None:
+            return np.zeros(self.t, np.float32)
+        return np.asarray(self._acc, np.float32)[:self.t]
+
+
+class ModularSink(_SinkBase):
+    """Streaming twin of ``compression.reduce_masked``: folds uint32
+    residue streams mod M = 2**mbits with wrap-around batch adds
+    (bit-exact under any fold order), subtracts integer repair
+    corrections mod M, and decodes once through the
+    ``masked_dequant_reduce`` kernel at finalize."""
+
+    plane = "masked_int"
+
+    def __init__(self, t: int, *, mbits: int, grid: float, **kw):
+        super().__init__(t, **kw)
+        self.mbits = int(mbits)
+        self.grid = float(grid)
+        self.tp = t + (-t) % CHUNK   # decode needs CHUNK-aligned columns
+        self._acc = jnp.zeros((self.tp,), jnp.uint32)
+        self._sub_staging: list = []
+
+    @property
+    def accumulator_bytes(self) -> int:
+        return 4 * self.tp
+
+    def _pad(self, z) -> np.ndarray:
+        # wire residue streams ride CHUNK-padded (masked_compress pads
+        # before masking), so both the logical t and the padded tp are
+        # valid arrival lengths
+        z = np.asarray(z).astype(np.uint32).reshape(-1)
+        if z.shape[0] not in (self.t, self.tp):
+            raise ValueError(
+                f"residue stream size {z.shape[0]} != sink size {self.t}")
+        if z.shape[0] != self.tp:
+            z = np.pad(z, (0, self.tp - z.shape[0]))
+        return z
+
+    def fold(self, z):
+        self._stage((self._pad(z), False))
+        self.n_folded += 1
+
+    def unfold(self, z):
+        self._stage((self._pad(z), True))
+        self.n_folded -= 1
+
+    def fold_correction(self, z):
+        """Modular subtraction of a survivor's integer repair stream."""
+        self._stage((self._pad(z), True))
+
+    def unfold_correction(self, z):
+        """Modular re-add of a correction that became stale (the dropout
+        set grew mid-repair) — exact inverse mod M."""
+        self._stage((self._pad(z), False))
+
+    def _row_bytes(self, item) -> int:
+        return item[0].nbytes
+
+    def _reduce(self, staged):
+        with self._span("modular_sum"):
+            for subtract in (False, True):
+                rows = [z for z, s in staged if s is subtract]
+                if not rows:
+                    continue
+                self._acc = _acc_fold_u32(subtract)(
+                    self._acc, jnp.asarray(np.stack(rows)))
+            self._acc.block_until_ready()
+
+    def finalize(self) -> np.ndarray:
+        self._flush()
+        self._finalized = True
+        scales = np.full(self.tp // CHUNK, np.float32(self.grid),
+                         np.float32)
+        with self._span("masked_dequant_reduce"):
+            if self.mesh is not None:
+                out = _shard.sharded_masked_dequant_reduce(
+                    self._acc[None, :], scales, modulus_bits=self.mbits,
+                    mesh=self.mesh, interpret=self.interpret)
+            else:
+                out = masked_dequant_reduce(
+                    self._acc[None, :], jnp.asarray(scales),
+                    modulus_bits=self.mbits, interpret=self.interpret)
+        return np.asarray(out, np.float32)[:self.t]
+
+
+class QuantSink(_SinkBase):
+    """Streaming twin of the int8 branch of
+    ``compression.reduce_compressed``: folds decoded (q, scales) wire
+    pairs weighted by raw example counts through ``dequant_reduce``;
+    ``finalize()`` returns the *weighted sum* plus per-client l2 norms —
+    the caller divides by ``total_weight`` for the weighted mean."""
+
+    plane = "compressed_int8"
+
+    def __init__(self, t: int, **kw):
+        super().__init__(t, **kw)
+        self.tp = t + (-t) % CHUNK
+        self._acc = None
+        self.total_weight = 0.0
+        self.norms: Dict[str, float] = {}
+
+    @property
+    def accumulator_bytes(self) -> int:
+        return 4 * self.tp
+
+    def fold(self, cid: str, q, scales, weight: float):
+        q = np.asarray(q, np.int8).reshape(-1)
+        if q.shape[0] != self.t:
+            raise ValueError(
+                f"quantized stream size {q.shape[0]} != sink size {self.t}")
+        if self.tp != self.t:
+            q = np.pad(q, (0, self.tp - self.t))
+        scales = np.asarray(scales, np.float32).reshape(-1)
+        # ||deq||^2 via per-chunk energies off the int8 rows (f32 squares
+        # exact: |q| <= 127 keeps a chunk's squared sum < 2**24)
+        qsq = (q.astype(np.float32) ** 2).reshape(-1, CHUNK).sum(
+            -1, dtype=np.float64)
+        self.norms[cid] = float(
+            np.sqrt((qsq * scales.astype(np.float64) ** 2).sum()))
+        self._stage((q, scales, np.float32(weight)))
+        self.total_weight += float(weight)
+        self.n_folded += 1 if weight > 0 else -1
+
+    def unfold(self, cid: str, q, scales, weight: float):
+        self.fold(cid, q, scales, -weight)
+        self.norms.pop(cid, None)
+
+    def _row_bytes(self, item) -> int:
+        return item[0].nbytes + item[1].nbytes
+
+    def _reduce(self, staged):
+        q = np.stack([s[0] for s in staged])
+        scales = np.stack([s[1] for s in staged])
+        ws = np.asarray([s[2] for s in staged], np.float32)
+        with self._span("dequant_reduce"):
+            if self.mesh is not None:
+                s = _shard.sharded_dequant_reduce(
+                    q, scales, ws, mesh=self.mesh,
+                    interpret=self.interpret)
+            else:
+                s = dequant_reduce(jnp.asarray(q), jnp.asarray(scales),
+                                   jnp.asarray(ws),
+                                   interpret=self.interpret)
+            if self._acc is None:
+                self._acc = s
+            else:
+                self._acc = _acc_add()(self._acc, s)
+            self._acc.block_until_ready()
+
+    def finalize(self) -> np.ndarray:
+        self._flush()
+        self._finalized = True
+        if self._acc is None:
+            return np.zeros(self.t, np.float32)
+        return np.asarray(self._acc, np.float32)[:self.t]
+
+
+class TopkSink:
+    """Sparse top-k scatter-accumulator — O(T) by construction; kept as a
+    sink so the collect loop treats every compressed scheme uniformly."""
+
+    plane = "compressed_topk"
+
+    def __init__(self, t: int, **_kw):
+        self.t = int(t)
+        self._acc = np.zeros(self.t, np.float32)
+        self.total_weight = 0.0
+        self.norms: Dict[str, float] = {}
+        self.n_folded = 0
+        self.fold_batches = 0
+        self.peak_bytes = self._acc.nbytes
+
+    @property
+    def accumulator_bytes(self) -> int:
+        return self._acc.nbytes
+
+    def fold(self, cid: str, idx, val, weight: float):
+        val = np.asarray(val, np.float32)
+        self._acc[np.asarray(idx, np.int64)] += np.float32(weight) * val
+        self.norms[cid] = float(np.linalg.norm(val.astype(np.float64)))
+        self.total_weight += float(weight)
+        self.n_folded += 1
+        self.fold_batches += 1
+
+    def unfold(self, cid: str, idx, val, weight: float):
+        self.fold(cid, idx, val, -weight)
+        self.norms.pop(cid, None)
+        self.n_folded -= 2           # the fold() above counted +1; net -1
+
+    def finalize(self) -> np.ndarray:
+        return self._acc
+
+
+# ---------------------------------------------------------------------------
+# wire-level streaming reducers — drop-in twins of compression.reduce_*
+# and secure_agg.aggregate_masked_packed that consume an *iterable* in
+# bounded batches (a generator over a lazy cohort mapping never
+# materializes the cohort).
+# ---------------------------------------------------------------------------
+def _masked_contract(m: dict, expect: Optional[tuple]) -> tuple:
+    got = (int(m["size"]), int(m["mbits"]), float(m["grid"]))
+    if m.get("scheme") != "masked_int8":
+        raise ValueError("reduce_masked needs masked_int8 wire dicts")
+    if expect is not None and got != expect:
+        raise ValueError(
+            "masked updates disagree on the shared coding contract "
+            "(size / mask modulus / quantization grid)")
+    return got
+
+
+def stream_reduce_masked(msgs: Iterable[dict], *, corrections=None,
+                         batch: int = DEFAULT_STREAM_BATCH, mesh="auto",
+                         interpret: Optional[bool] = None, telemetry=None,
+                         run_id: Optional[str] = None) -> np.ndarray:
+    """Streaming ``compression.reduce_masked``: same contract checks,
+    same (T,) f32 decoded sum — bit-exact vs the stacked path (the
+    modular fold is order-independent). ``corrections`` is an iterable
+    aligned with ``msgs`` (or None)."""
+    sink = None
+    contract = None
+    corr_iter = iter(corrections) if corrections is not None else None
+    n = 0
+    for m in msgs:
+        contract = _masked_contract(m, contract)
+        if sink is None:
+            t, mbits, grid = contract
+            sink = ModularSink(t, mbits=mbits, grid=grid, batch=batch,
+                               mesh=mesh, interpret=interpret,
+                               telemetry=telemetry, run_id=run_id)
+        sink.fold(m["z"])
+        if corr_iter is not None:
+            try:
+                sink.fold_correction(next(corr_iter))
+            except StopIteration:
+                raise ValueError(
+                    "repair corrections do not match the masked stream "
+                    "count") from None
+        n += 1
+    if sink is None:
+        raise ValueError("no masked updates to reduce")
+    if corr_iter is not None:
+        leftover = sum(1 for _ in corr_iter)
+        if leftover:
+            raise ValueError(
+                f"{leftover} repair corrections do not match the masked "
+                f"stream count {n}")
+    return sink.finalize()
+
+
+def stream_reduce_compressed(msgs: Iterable[dict], weights, *,
+                             return_norms: bool = False,
+                             batch: int = DEFAULT_STREAM_BATCH,
+                             mesh="auto",
+                             interpret: Optional[bool] = None,
+                             telemetry=None,
+                             run_id: Optional[str] = None):
+    """Streaming ``compression.reduce_compressed``: weights are used as
+    given (the caller normalizes), norms ride along per fold. Accepts the
+    same wire dicts; ``weights`` must be indexable and aligned with the
+    iteration order of ``msgs``."""
+    from repro.core.compression import quantized_values
+    sink = None
+    w = np.asarray(weights, np.float32)
+    t = None
+    scheme = None
+    i = 0
+    for m in msgs:
+        if scheme is None:
+            scheme, t = m["scheme"], int(m["size"])
+        if m["scheme"] != scheme:
+            raise ValueError(
+                f"mixed compression schemes in one cohort: "
+                f"{sorted({scheme, m['scheme']})}")
+        if int(m["size"]) != t:
+            raise ValueError("compressed updates disagree on buffer size")
+        if scheme == "topk":
+            sink = sink or TopkSink(t)
+            sink.fold(str(i), m["idx"], m["val"], w[i])
+        else:
+            if sink is None:
+                sink = QuantSink(t, batch=batch, mesh=mesh,
+                                 interpret=interpret, telemetry=telemetry,
+                                 run_id=run_id)
+            sink.fold(str(i), quantized_values(m), m["scales"], w[i])
+        i += 1
+    if sink is None:
+        raise ValueError("no compressed updates to reduce")
+    out = sink.finalize()
+    if not return_norms:
+        return out
+    return out, [sink.norms[str(j)] for j in range(i)]
+
+
+def stream_masked_packed(buffers: Iterable, weights: Optional[Sequence]
+                         = None, *, corrections=None,
+                         batch: int = DEFAULT_STREAM_BATCH, mesh="auto",
+                         interpret: Optional[bool] = None, telemetry=None,
+                         run_id: Optional[str] = None) -> np.ndarray:
+    """Streaming ``secure_agg.aggregate_masked_packed``: same defaults
+    (uniform mean when ``weights`` is None, else the weights are used as
+    given), corrections fold as negative-weight rows. fp32 fold order
+    differs from the stacked tensordot only at rounding level."""
+    bufs = buffers
+    if weights is None:
+        bufs = list(bufs)            # the uniform mean needs the count
+        if not bufs:
+            raise ValueError("no masked buffers to reduce")
+        weights = np.full((len(bufs),), 1.0 / len(bufs), np.float32)
+    sink = None
+    w = np.asarray(weights, np.float32)
+    corr_iter = iter(corrections) if corrections is not None else None
+    i = 0
+    for b in bufs:
+        b = np.asarray(b, np.float32).reshape(-1)
+        if sink is None:
+            sink = MaskedF32Sink(b.shape[0], batch=batch, mesh=mesh,
+                                 interpret=interpret, telemetry=telemetry,
+                                 run_id=run_id)
+        sink.fold(b, w[i])
+        if corr_iter is not None:
+            sink.fold_correction(next(corr_iter), w[i])
+        i += 1
+    if sink is None:
+        raise ValueError("no masked buffers to reduce")
+    return sink.finalize()
+
+
+# ---------------------------------------------------------------------------
+# protocol-facing wrappers: fold-on-arrival cohorts and lazy board views
+# ---------------------------------------------------------------------------
+class LazyView:
+    """Read-through view over a lazily-decrypted cohort mapping: each
+    ``view[cid]`` decrypts that client's payload *now* and extracts one
+    key — nothing is cached, so a batched fold loop holds at most one
+    decrypted payload per staged row."""
+
+    def __init__(self, msgs, key: str):
+        self._msgs = msgs
+        self._key = key
+
+    def __getitem__(self, cid):
+        return self._msgs[cid][self._key]
+
+    def __iter__(self):
+        return iter(self._msgs)
+
+    def __len__(self):
+        return len(self._msgs)
+
+    def __contains__(self, cid):
+        return cid in self._msgs
+
+    def keys(self):
+        return self._msgs.keys()
+
+
+class StreamedUpdates:
+    """The ``updates`` mapping ``_aggregate_and_advance`` receives when
+    the collect phase folded the cohort on arrival: cids map to the
+    opaque sink (the buffers themselves are gone — that is the point).
+    Supports the mapping surface the server/protocol layer touches
+    (membership, iteration, len) and ``restrict_to`` for mid-repair
+    dropouts."""
+
+    def __init__(self, sink, plane: str):
+        self.sink = sink
+        self.plane = plane
+        self._cids: Dict[str, bool] = {}
+
+    def note_folded(self, cid: str):
+        self._cids[cid] = True
+
+    def __iter__(self):
+        return iter(self._cids)
+
+    def __len__(self):
+        return len(self._cids)
+
+    def __contains__(self, cid):
+        return cid in self._cids
+
+    def keys(self):
+        return self._cids.keys()
+
+    def __getitem__(self, cid):
+        if cid not in self._cids:
+            raise KeyError(cid)
+        return self.sink                 # opaque handle; already folded
+
+    def restrict_to(self, cohort, refetch: Callable[[str], object]):
+        """Unfold members that dropped after being folded: ``refetch``
+        returns the client's original heavy payload from the board (still
+        posted — round GC runs at commit), and the sink backs it out."""
+        for cid in [c for c in self._cids if c not in set(cohort)]:
+            payload = refetch(cid)
+            if self.plane == "masked_int":
+                self.sink.unfold(payload["z"])
+            else:
+                self.sink.unfold(payload)
+            del self._cids[cid]
+
+
+class LazyCohort:
+    """Decrypt-on-access cohort mapping: ``mapping[cid]`` runs
+    ``comm.collect`` *at access time* instead of eagerly materializing
+    every decrypted payload. ``_poll_cohort(..., lazy=True)`` returns
+    this so the repair fold can stream corrections one batch at a time —
+    the O(N x T) dict of decrypted correction buffers never exists."""
+
+    def __init__(self, comm, paths: Dict[str, str]):
+        self._comm = comm
+        self._paths = dict(paths)
+
+    def __getitem__(self, cid):
+        msg = self._comm.collect(self._paths[cid], cid)
+        if msg is None:
+            raise KeyError(cid)
+        return msg
+
+    def __iter__(self):
+        return iter(self._paths)
+
+    def __len__(self):
+        return len(self._paths)
+
+    def __contains__(self, cid):
+        return cid in self._paths
+
+    def keys(self):
+        return self._paths.keys()

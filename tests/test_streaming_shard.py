@@ -1,0 +1,348 @@
+"""Streaming + mesh-sharded server aggregation (DESIGN.md §Sharded
+streaming aggregation).
+
+Three parity surfaces, each against the stacked kernel-ops oracle:
+
+1. **Sharded vs single-device** — the four T-sharded combine wrappers in
+   ``repro.sharding.agg`` at sizes NOT divisible by the mesh (zero
+   padding must be an exact identity). Skipped below 2 JAX devices; CI
+   runs them under ``--xla_force_host_platform_device_count=4``.
+2. **Streamed vs stacked** — the O(T) accumulator sinks fold one update
+   at a time in batches; fp32 planes match the stacked tensordot to
+   <= 1e-5, integer-domain planes are BIT-exact (uint32 wrap preserves
+   residues mod 2**mbits for any fold order).
+3. **Fold algebra** — unfold (dropout back-out), fold_correction /
+   unfold_correction (repair + stale-epoch back-out) round-trips, plus
+   the container types the protocol streams through (StreamedUpdates,
+   LazyCohort) and the telemetry the sinks emit (peak-bytes gauge flat
+   in cohort size, fold-batch counter).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import compression, secure_agg, streaming
+from repro.core.compression import CHUNK, compress, masked_compress
+from repro.kernels.compressed_agg.ops import (dequant_reduce,
+                                              masked_dequant_reduce)
+from repro.kernels.secure_agg.ops import masked_sum, masked_sum_corrected
+from repro.sharding import agg as shard
+
+multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >=2 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=4)")
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# 1. sharded vs single-device, T not divisible by the mesh
+# ---------------------------------------------------------------------------
+@multi_device
+def test_sharded_masked_sum_matches_single_device():
+    mesh = shard.agg_mesh()
+    rng = _rng(0)
+    x = rng.normal(size=(5, 3001)).astype(np.float32)  # T % shards != 0
+    w = rng.uniform(0.5, 2.0, size=(5,)).astype(np.float32)
+    ref = np.asarray(masked_sum(x, w))
+    got = np.asarray(shard.sharded_masked_sum(x, w, mesh=mesh))
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@multi_device
+def test_sharded_masked_sum_corrected_matches_single_device():
+    mesh = shard.agg_mesh()
+    rng = _rng(1)
+    x = rng.normal(size=(5, 3001)).astype(np.float32)
+    corr = rng.normal(size=(5, 3001)).astype(np.float32)
+    w = np.full((5,), 0.2, np.float32)
+    ref = np.asarray(masked_sum_corrected(x, corr, w))
+    got = np.asarray(
+        shard.sharded_masked_sum_corrected(x, corr, w, mesh=mesh))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@multi_device
+def test_sharded_dequant_reduce_matches_single_device():
+    mesh = shard.agg_mesh()
+    rng = _rng(2)
+    t = 3 * CHUNK                    # CHUNK-aligned but not shards*CHUNK
+    q = rng.integers(-127, 128, size=(5, t)).astype(np.int8)
+    scales = rng.uniform(1e-3, 1e-2,
+                         size=(5, t // CHUNK)).astype(np.float32)
+    w = rng.uniform(0.1, 1.0, size=(5,)).astype(np.float32)
+    ref = np.asarray(dequant_reduce(q, scales, w))
+    got = np.asarray(shard.sharded_dequant_reduce(q, scales, w, mesh=mesh))
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+@multi_device
+@pytest.mark.parametrize("with_corr", [False, True])
+def test_sharded_masked_dequant_reduce_bit_exact(with_corr):
+    mesh = shard.agg_mesh()
+    rng = _rng(3)
+    t, mbits = 3 * CHUNK, 18
+    z = rng.integers(0, 1 << mbits, size=(5, t)).astype(np.uint32)
+    corr = (rng.integers(0, 1 << mbits, size=(5, t)).astype(np.uint32)
+            if with_corr else None)
+    scales = np.full((t // CHUNK,), 1e-2, np.float32)
+    ref = np.asarray(masked_dequant_reduce(z, scales, modulus_bits=mbits,
+                                           corr=corr))
+    got = np.asarray(shard.sharded_masked_dequant_reduce(
+        z, scales, modulus_bits=mbits, corr=corr, mesh=mesh))
+    assert np.array_equal(got, ref)   # integer decode: exactly equal
+
+
+@multi_device
+def test_sharded_rejects_unaligned_chunk_sizes():
+    mesh = shard.agg_mesh()
+    q = np.zeros((2, CHUNK + 1), np.int8)
+    with pytest.raises(ValueError, match="multiple of CHUNK"):
+        shard.sharded_dequant_reduce(q, np.ones((2, 2), np.float32),
+                                     np.ones(2, np.float32), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# 2. streamed vs stacked parity
+# ---------------------------------------------------------------------------
+def test_stream_masked_packed_matches_stacked_mean():
+    rng = _rng(4)
+    bufs = [rng.normal(size=(3001,)).astype(np.float32) for _ in range(5)]
+    ref = np.asarray(secure_agg.aggregate_masked_packed(np.stack(bufs)))
+    got = streaming.stream_masked_packed(bufs, batch=2)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def test_stream_masked_packed_with_corrections():
+    rng = _rng(5)
+    bufs = [rng.normal(size=(2048,)).astype(np.float32) for _ in range(4)]
+    corrs = [rng.normal(size=(2048,)).astype(np.float32)
+             for _ in range(4)]
+    ref = np.asarray(secure_agg.aggregate_masked_packed(
+        np.stack(bufs), corrections=np.stack(corrs)))
+    got = streaming.stream_masked_packed(bufs, corrections=corrs, batch=3)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+
+def _masked_int_cohort(n=5, t=3000, mbits_bits=8, seed=6):
+    rng = _rng(seed)
+    cohort = [f"c{i}" for i in range(n)]
+    grid = 0.02
+    msgs, deqs = [], []
+    for cid in cohort:
+        buf = rng.normal(size=(t,)).astype(np.float32)
+        msg, deq = masked_compress(buf, grid=grid, client_id=cid,
+                                   cohort=cohort, pair_secret=b"s",
+                                   bits=mbits_bits)
+        msgs.append(msg)
+        deqs.append(deq)
+    return msgs, deqs
+
+
+def _stacked_masked_int_oracle(msgs, corrections=None):
+    m0 = msgs[0]
+    tp = m0["z"].size
+    z = np.stack([m["z"].astype(np.uint32) for m in msgs])
+    corr = (np.stack([c.astype(np.uint32) for c in corrections])
+            if corrections is not None else None)
+    scales = np.full((tp // CHUNK,), np.float32(m0["grid"]), np.float32)
+    out = np.asarray(masked_dequant_reduce(
+        z, scales, modulus_bits=m0["mbits"], corr=corr))
+    return out[:m0["size"]]
+
+
+def test_stream_reduce_masked_bit_exact_vs_stacked():
+    msgs, deqs = _masked_int_cohort()
+    ref = _stacked_masked_int_oracle(msgs)
+    got = streaming.stream_reduce_masked(iter(msgs), batch=2)
+    assert np.array_equal(got, ref)
+    # and the decode is the sum of the clean dequantized streams
+    np.testing.assert_allclose(got, np.sum(deqs, axis=0), atol=1e-5)
+
+
+def test_stream_reduce_masked_uint32_wraparound():
+    """mbits=32-adjacent residues: batched uint32 accumulation must wrap
+    identically to the stacked kernel (residue algebra, not saturation)."""
+    rng = _rng(7)
+    t, mbits = 2 * CHUNK, 32
+    msgs = [{"scheme": "masked_int8", "size": t, "bits": 8,
+             "mbits": mbits, "grid": 0.01,
+             "z": rng.integers(0, 1 << 32, size=(t,), dtype=np.uint64)
+             .astype(np.uint32)} for _ in range(6)]
+    ref = _stacked_masked_int_oracle(msgs)
+    for batch in (1, 3, 6):
+        got = streaming.stream_reduce_masked(iter(msgs), batch=batch)
+        assert np.array_equal(got, ref), f"batch={batch}"
+
+
+def test_stream_reduce_masked_with_corrections_bit_exact():
+    msgs, _ = _masked_int_cohort(n=4, seed=8)
+    rng = _rng(9)
+    tp = msgs[0]["z"].size
+    mbits = msgs[0]["mbits"]
+    corrs = [rng.integers(0, 1 << mbits, size=(tp,)).astype(np.uint32)
+             for _ in msgs]
+    ref = _stacked_masked_int_oracle(msgs, corrections=corrs)
+    got = streaming.stream_reduce_masked(iter(msgs), corrections=corrs,
+                                         batch=3)
+    assert np.array_equal(got, ref)
+
+
+def test_stream_reduce_masked_rejects_short_corrections():
+    msgs, _ = _masked_int_cohort(n=3, seed=10)
+    tp = msgs[0]["z"].size
+    corrs = [np.zeros(tp, np.uint32)]    # one correction for three msgs
+    with pytest.raises(ValueError, match="corrections do not match"):
+        streaming.stream_reduce_masked(iter(msgs), corrections=corrs)
+
+
+def test_stream_reduce_compressed_matches_stacked_int8():
+    rng = _rng(11)
+    t, n = 3000, 5
+    bufs = [rng.normal(size=(t,)).astype(np.float32) for _ in range(n)]
+    msgs = [compress(b, "int8") for b in bufs]
+    w = rng.uniform(0.1, 1.0, size=(n,)).astype(np.float32)
+    ref, ref_norms = compression.reduce_compressed(msgs, w,
+                                                   return_norms=True)
+    got, got_norms = streaming.stream_reduce_compressed(
+        iter(msgs), w, return_norms=True, batch=2)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+    np.testing.assert_allclose(got_norms, ref_norms, atol=1e-5)
+
+
+def test_quant_sink_weighted_finalize_matches_dequant_reduce():
+    rng = _rng(12)
+    t, n = 2 * CHUNK, 4
+    msgs = [compress(rng.normal(size=(t,)).astype(np.float32), "int8")
+            for _ in range(n)]
+    w = np.asarray([1.0, 2.0, 3.0, 4.0], np.float32)
+    q = np.stack([compression.quantized_values(m) for m in msgs])
+    scales = np.stack([m["scales"] for m in msgs])
+    ref = np.asarray(dequant_reduce(q, scales, w))[:t]
+    sink = streaming.QuantSink(t, batch=3)
+    for i, m in enumerate(msgs):
+        sink.fold(str(i), compression.quantized_values(m), m["scales"],
+                  float(w[i]))
+    np.testing.assert_allclose(sink.finalize(), ref, atol=1e-5)
+    assert sink.total_weight == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. fold algebra, containers, telemetry
+# ---------------------------------------------------------------------------
+def test_masked_sink_unfold_backs_out_a_client():
+    rng = _rng(13)
+    bufs = [rng.normal(size=(1000,)).astype(np.float32) for _ in range(5)]
+    sink = streaming.MaskedF32Sink(1000, batch=2, mesh=None)
+    for b in bufs:
+        sink.fold(b)
+    sink.unfold(bufs[2])             # dropout discovered after folding
+    assert sink.n_folded == 4
+    ref = np.sum([b for i, b in enumerate(bufs) if i != 2], axis=0)
+    np.testing.assert_allclose(sink.finalize(), ref, atol=1e-4)
+
+
+def test_modular_sink_unfold_correction_is_exact():
+    """Stale-epoch repair back-out: fold_correction then
+    unfold_correction must restore the accumulator bit-exactly."""
+    msgs, _ = _masked_int_cohort(n=4, seed=14)
+    tp = msgs[0]["z"].size
+    mbits, grid = msgs[0]["mbits"], msgs[0]["grid"]
+    ref = _stacked_masked_int_oracle(msgs)
+    rng = _rng(15)
+    stale = rng.integers(0, 1 << mbits, size=(tp,)).astype(np.uint32)
+    sink = streaming.ModularSink(msgs[0]["size"], mbits=mbits, grid=grid,
+                                 batch=3)
+    for m in msgs:
+        sink.fold(m["z"])
+    sink.fold_correction(stale)      # epoch bumped: this one is stale
+    sink.unfold_correction(stale)    # ...backed out exactly
+    assert np.array_equal(sink.finalize(), ref)
+
+
+def test_masked_sink_unfold_correction_round_trip():
+    rng = _rng(16)
+    bufs = [rng.normal(size=(512,)).astype(np.float32) for _ in range(3)]
+    stale = rng.normal(size=(512,)).astype(np.float32)
+    sink = streaming.MaskedF32Sink(512, batch=2, mesh=None)
+    for b in bufs:
+        sink.fold(b)
+    sink.fold_correction(stale)
+    sink.unfold_correction(stale)
+    assert sink.n_folded == 3        # corrections never count as clients
+    np.testing.assert_allclose(sink.finalize(), np.sum(bufs, axis=0),
+                               atol=1e-4)
+
+
+def test_streamed_updates_restrict_to_refetches_and_unfolds():
+    msgs, deqs = _masked_int_cohort(n=4, seed=17)
+    cids = [f"c{i}" for i in range(4)]
+    sink = streaming.ModularSink(msgs[0]["size"], mbits=msgs[0]["mbits"],
+                                 grid=msgs[0]["grid"], batch=2)
+    container = streaming.StreamedUpdates(sink, "masked_int")
+    for cid, m in zip(cids, msgs):
+        sink.fold(m["z"])
+        container.note_folded(cid)
+    assert set(container) == set(cids) and len(container) == 4
+    # c3 drops after folding: restrict_to refetches its payload + unfolds
+    fetched = []
+
+    def refetch(cid):
+        fetched.append(cid)
+        return {"z": msgs[cids.index(cid)]["z"]}
+
+    container.restrict_to(cids[:3], refetch)
+    assert fetched == ["c3"] and set(container) == set(cids[:3])
+    ref = _stacked_masked_int_oracle(msgs[:3])
+    assert np.array_equal(sink.finalize(), ref)
+
+
+def test_lazy_cohort_collects_on_access():
+    calls = []
+
+    class Comm:
+        def collect(self, path, cid):
+            calls.append((path, cid))
+            return {"payload": cid} if cid != "gone" else None
+
+    lc = streaming.LazyCohort(Comm(), {"a": "p/a", "gone": "p/gone"})
+    assert not calls                  # nothing fetched up front
+    assert lc["a"] == {"payload": "a"}
+    with pytest.raises(KeyError):
+        lc["gone"]
+    assert ("p/a", "a") in calls
+
+
+def test_sink_telemetry_peak_bytes_flat_in_cohort_size():
+    from repro.core import Telemetry
+    tel = Telemetry(enabled=True)
+    rng = _rng(18)
+    t, batch = 4096, 4
+    peaks = {}
+    for n in (8, 16):
+        sink = streaming.MaskedF32Sink(t, batch=batch, mesh=None,
+                                       telemetry=tel, run_id="r0")
+        for _ in range(n):
+            sink.fold(rng.normal(size=(t,)).astype(np.float32))
+        sink.finalize()
+        peaks[n] = sink.peak_bytes
+        assert sink.fold_batches == n // batch
+    assert peaks[8] == peaks[16]      # O(T): flat as the cohort doubles
+    g = tel.metrics.gauge(streaming.GAUGE_PEAK_BYTES, plane="masked_f32")
+    assert g.read() == peaks[16]
+    c = tel.metrics.counter(streaming.COUNTER_FOLD_BATCHES,
+                            plane="masked_f32")
+    assert c.read() == (8 + 16) // batch
+
+
+def test_finalized_sink_refuses_more_folds():
+    sink = streaming.MaskedF32Sink(64, batch=2, mesh=None)
+    sink.fold(np.ones(64, np.float32))
+    sink.finalize()
+    with pytest.raises(RuntimeError, match="finalized"):
+        sink.fold(np.ones(64, np.float32))

@@ -277,6 +277,24 @@ def test_fleet_report_joins_monitor_and_metrics():
     assert rep["metrics"]["sched.passes"] == rep["monitor"]["stats"]["passes"]
 
 
+def test_fleet_report_surfaces_streaming_agg_metrics():
+    """A secure run folds updates through the streaming sinks; the
+    accumulator gauge and fold-batch counter must land in fleet_report
+    (DESIGN.md §Sharded streaming aggregation)."""
+    from repro.core import Telemetry
+    from repro.core.reporting import fleet_report
+    sched, cids = make_fleet(n_silos=2, capacity=1,
+                             telemetry=Telemetry(enabled=True))
+    run_id = submit_job(sched, cids, secure_aggregation=True)
+    sched.run(max_passes=500)
+    rep = fleet_report(sched)
+    assert rep["runs"][run_id]["state"] == "done"
+    folds = rep["metrics"]["agg.stream_fold_batches"]
+    peak = rep["metrics"]["agg.accumulator_peak_bytes"]
+    assert folds["plane=masked_f32"] >= 1
+    assert peak["plane=masked_f32"] > 0
+
+
 def test_metadata_clock_injection():
     ticks = iter(range(100))
     md = MetadataStore(clock=lambda: float(next(ticks)))
