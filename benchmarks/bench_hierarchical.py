@@ -1,0 +1,217 @@
+"""Hierarchical two-tier federation benchmark (BENCH_hierarchical.json).
+
+The tentpole's scale claim, measured: each silo fronts a 10k-device
+fleet and folds a 5% per-round cohort through the O(T) streaming sink,
+so the federation trains over 80k simulated devices while the outer
+wire still carries exactly 8 silo updates per round (secure-agg
+included — the masked plane composes unchanged over pre-aggregated
+deltas). Three sections:
+
+* **scale** — 8 silos x 10_000 devices, device_cohort_size=500 (5%),
+  Bernoulli dropout, masked outer rounds. Reports devices/sec folded
+  per silo (from the ``inner_round`` provenance each silo records),
+  the loss curve, and rounds-to-target.
+* **memory** — the O(T) proof: one silo folds inner cohorts of 12 and
+  24 devices (both past the sink's batch staging cap) and the
+  ``peak_fold_bytes`` high-water must be flat — folding twice the
+  devices must not cost more accumulator memory
+  (``check_regression.py`` gates the ratio at 1.01).
+* **twin** — the degenerate fleet (devices_per_silo=1, cohort 1,
+  dropout 0) against the flat run on the plain plane: the single-
+  survivor shortcut makes the equivalence *bit-for-bit*, so the
+  reported max abs err must be 0.0 (gated at the usual 1e-4).
+
+``--smoke`` runs tiny shapes of all three sections (2 silos x 48
+devices) and writes no JSON — the CI tripwire.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(_REPO_ROOT, "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _env import force_host_devices  # noqa: E402
+
+force_host_devices()
+
+ARCH = "fedforecast-100m"
+
+
+def run_federation(n_orgs, *, rounds, local_steps=1, batch_size=2,
+                   secure=True, seed=0, lr=1e-3, **device_decisions):
+    """One consortium run; returns ``(con, wall_s)``."""
+    from repro.core import Consortium, DataSchema
+    from repro.data import make_silo_datasets
+    con = Consortium([f"org{i:02d}" for i in range(n_orgs)], seed=seed,
+                     master_key=b"bench-key".ljust(32, b"0"))
+    schema = DataSchema(vocab=512, seq_len=32)
+    decisions = {"arch": ARCH, "rounds": rounds,
+                 "local_steps": local_steps, "batch_size": batch_size,
+                 "lr": lr, "secure_aggregation": secure,
+                 "data_schema": schema.to_dict()}
+    decisions.update(device_decisions)
+    contract = con.negotiate(decisions)
+    job = con.server.job_creator.from_contract(contract)
+    datasets = make_silo_datasets(n_orgs, vocab=512, seq_len=32, seed=seed)
+    con.start(job, datasets)
+    t0 = time.perf_counter()
+    phase = con.run_to_completion(max_ticks=100_000)
+    wall = time.perf_counter() - t0
+    assert phase == "done", phase
+    return con, wall
+
+
+def inner_round_records(con):
+    recs = []
+    for node in con.nodes:
+        recs.extend(node.metadata.query(operation="inner_round"))
+    return [r["details"] for r in recs]
+
+
+def run_scale(n_silos=8, devices=10_000, cohort=500, *, rounds=2,
+              dropout=0.05, clip=15.0, lr=0.01, target_loss=6.238):
+    # lr/clip are calibrated for the averaged inner tier: the silo's
+    # posted delta is the mean of ~cohort adamw deltas (each ~lr*sqrt(T)
+    # in L2, ~12 here), so the per-device clip sits just above the
+    # typical norm — it bounds outlier devices without strangling every
+    # update, and lr=1e-2 makes the 5%-cohort mean actually descend.
+    # target_loss = ln(512) = 6.238, the uniform-predictor cross-entropy
+    # for the vocab-512 schema: crossing it means the federation
+    # demonstrably learned structure from the fleet (device-level batch
+    # noise mostly cancels in the 500-device mean, so the per-round
+    # descent is small but real)
+    print(f"== scale: {n_silos} silos x {devices} devices, "
+          f"cohort {cohort} ({100 * cohort / devices:.0f}%), "
+          f"dropout {dropout}, secure outer rounds ==")
+    con, wall = run_federation(
+        n_silos, rounds=rounds, lr=lr, devices_per_silo=devices,
+        device_cohort_size=cohort, device_dropout=dropout,
+        device_clip=clip)
+    details = inner_round_records(con)
+    folded = sum(d["folded"] for d in details)
+    dropped = sum(d["dropped"] for d in details)
+    # devices/sec per silo-round, from each silo's own provenance — the
+    # first inner round pays the jit compile, so report the steady-state
+    # median alongside the honest overall throughput
+    rates = sorted(d["devices_per_sec"] for d in details)
+    losses = [h["mean_train_loss"] for h in con.server.run.history]
+    to_target = next((h["round"] + 1 for h in con.server.run.history
+                      if h["mean_train_loss"] <= target_loss), None)
+    out = {
+        "n_silos": n_silos, "devices_per_silo": devices,
+        "device_cohort_size": cohort, "device_dropout": dropout,
+        "device_clip": clip, "lr": lr, "rounds": rounds,
+        "simulated_devices": n_silos * devices,
+        "devices_folded": folded, "devices_dropped": dropped,
+        "wall_s": wall,
+        "devices_per_sec_overall": folded / wall,
+        "devices_per_sec_median_silo_round": rates[len(rates) // 2],
+        "loss_curve": losses,
+        "target_loss": target_loss,
+        "rounds_to_target": to_target,
+    }
+    print(f"  folded {folded} devices ({dropped} dropped) in "
+          f"{wall:.1f}s -> {out['devices_per_sec_overall']:.1f} dev/s "
+          f"overall, {out['devices_per_sec_median_silo_round']:.1f} "
+          f"median silo-round")
+    print(f"  loss {losses[0]:.3f} -> {losses[-1]:.3f}, target "
+          f"{target_loss} reached at round {to_target}")
+    return out
+
+
+def run_memory(devices=64, cohorts=(12, 24), *, local_steps=1):
+    print(f"== memory: inner cohorts {cohorts} ==")
+    peaks = {}
+    for k in cohorts:
+        con, _ = run_federation(
+            2, rounds=1, local_steps=local_steps, secure=False,
+            devices_per_silo=devices, device_cohort_size=k)
+        details = inner_round_records(con)
+        assert all(d["folded"] == k for d in details)
+        peaks[k] = max(d["peak_fold_bytes"] for d in details)
+        print(f"  cohort {k:3d}: peak_fold_bytes {peaks[k]}")
+    flatness = max(peaks.values()) / min(peaks.values())
+    print(f"  flatness {flatness:.4f} (O(T): folding {max(cohorts)} "
+          f"devices peaks at the same bytes as {min(cohorts)})")
+    return {"devices": devices,
+            "peak_fold_bytes": {str(k): v for k, v in peaks.items()},
+            "flatness": flatness}
+
+
+def run_twin(n_orgs=2, rounds=2, *, local_steps=2):
+    print("== twin: degenerate fleet vs flat silo (plain plane) ==")
+    import jax
+    flat, _ = run_federation(n_orgs, rounds=rounds,
+                             local_steps=local_steps, secure=False)
+    fleet, _ = run_federation(n_orgs, rounds=rounds,
+                              local_steps=local_steps, secure=False,
+                              devices_per_silo=1, device_cohort_size=1)
+    ga = flat.server.store.get(flat.server.run.global_digest)
+    gb = fleet.server.store.get(fleet.server.run.global_digest)
+    err = max(float(np.max(np.abs(np.asarray(a, np.float32)
+                                  - np.asarray(b, np.float32))))
+              for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)))
+    print(f"  twin_max_abs_err {err} (single-survivor shortcut: exact)")
+    return {"n_silos": n_orgs, "rounds": rounds, "twin_max_abs_err": err}
+
+
+def run_smoke():
+    """Tiny shapes of all three sections; no JSON written."""
+    scale = run_scale(n_silos=2, devices=48, cohort=6, rounds=1,
+                      dropout=0.25, target_loss=0.0)
+    assert scale["devices_folded"] > 0
+    mem = run_memory(devices=32, cohorts=(12, 24))
+    assert mem["flatness"] <= 1.01, mem
+    twin = run_twin(rounds=1, local_steps=1)
+    assert twin["twin_max_abs_err"] == 0.0, twin
+    print("hierarchical smoke: ok")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape smoke pass (no JSON written)")
+    ap.add_argument("--devices", type=int, default=10_000)
+    ap.add_argument("--silos", type=int, default=8)
+    ap.add_argument("--cohort", type=int, default=500)
+    ap.add_argument("--section", choices=["scale", "memory", "twin"],
+                    default=None,
+                    help="run one section and merge it into an existing "
+                         "BENCH_hierarchical.json (the full sweep is "
+                         "long on a single core)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke()
+        return 0
+    path = os.path.join(_REPO_ROOT, "BENCH_hierarchical.json")
+    sections = {
+        "scale": lambda: run_scale(args.silos, args.devices, args.cohort),
+        "memory": run_memory,
+        "twin": run_twin,
+    }
+    report = {"bench": "hierarchical"}
+    if args.section:
+        if os.path.exists(path):
+            with open(path) as f:
+                report.update(json.load(f))
+        report[args.section] = sections[args.section]()
+    else:
+        for name, fn in sections.items():
+            report[name] = fn()
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"report written: {os.path.abspath(path)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,7 @@ asked it to (requirement 6).
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional
@@ -56,6 +57,14 @@ _STEP_CACHE_MAX = 32
 # internal tag for the release fine-tune step — deliberately NOT a string,
 # so it can never collide with a governance-negotiated job.optimizer value
 PERSONALIZE = object()
+
+
+class InnerRoundAborted(RuntimeError):
+    """Raised by an inner-round boundary hook to kill a silo's round
+    before anything is trained or posted (tier-aware fault injection:
+    ``Consortium.run_to_completion(drop_at={org: ("inner_round", r)})``).
+    The silo simply never posts — the server-side dropout machinery
+    handles the disappearance like any other vanished client."""
 
 
 def _lru_get(cache, key, build, cap):
@@ -107,9 +116,15 @@ class FLClientNode:
         self.comm = comm
         self.dataset = dataset
         self.run_id = run_id
+        # board namespace root for this run's resources — mirror of
+        # RunState.ns on the server side, so neither tier hardcodes the
+        # "runs/<id>" layout
+        self.ns = f"runs/{run_id}"
         self.cohort = sorted(cohort)
         self.pair_secret = pair_secret
-        self.config = config or ClientConfig()
+        # `is None`, not truthiness — same guard as metadata below; a
+        # falsy-but-real config must be adopted, not silently replaced
+        self.config = ClientConfig() if config is None else config
         # the federation-wide observability bundle rides the board — the
         # same instance the scheduler and servers stamp their spans on
         self.telemetry = comm.board.telemetry
@@ -137,6 +152,13 @@ class FLClientNode:
         self._packed_size: Optional[int] = None
         self._repair_done = None            # (hp, round, epoch) last posted
         self._attempt_seen = 0              # server round_attempt mirrored
+        # hierarchical device fleet (DESIGN.md §Hierarchical federation):
+        # built with the job when it negotiates devices_per_silo > 1 (or
+        # an explicit device_cohort_size); inner_hooks fire at inner-round
+        # boundaries — the tier-aware analogue of the scheduler's
+        # on_phase callback (Consortium wires drop_at through them)
+        self.fleet = None
+        self.inner_hooks: List = []
         # deployment state
         self.deployed_params = None
         self.deployed_digest: Optional[str] = None
@@ -155,14 +177,14 @@ class FLClientNode:
             self._hb += 1
             self.comm.heartbeat(self.run_id, self._hb)
         if self.job is None:
-            job_d = self.comm.fetch(f"runs/{self.run_id}/job",
+            job_d = self.comm.fetch(f"{self.ns}/job",
                                     broadcast=True)
             if job_d is None:
                 return "waiting_job"
             self._setup_job(FLJob.from_dict(job_d))
             return "job_fetched"
         if not self.said_hello:
-            self.comm.post(f"runs/{self.run_id}/hello/{self.client_id}",
+            self.comm.post(f"{self.ns}/hello/{self.client_id}",
                            {"client": self.client_id})
             self.said_hello = True
             return "hello"
@@ -170,7 +192,7 @@ class FLClientNode:
             stats = dict(self.dataset.stats())
             declared = getattr(self.dataset, "n_examples", None)
             stats["n_examples"] = declared if declared is not None else 10 ** 6
-            self.comm.post(f"runs/{self.run_id}/validation/{self.client_id}",
+            self.comm.post(f"{self.ns}/validation/{self.client_id}",
                            stats)
             self.posted_stats = True
             self.metadata.record_provenance(
@@ -181,7 +203,7 @@ class FLClientNode:
         # conditional fetch: status is polled every tick but changes at
         # most once per round — unchanged ticks cost a metadata round
         # trip, not a re-download + decrypt
-        status = self.comm.fetch_cached(f"runs/{self.run_id}/status",
+        status = self.comm.fetch_cached(f"{self.ns}/status",
                                         broadcast=True)
         if status is None:
             return "waiting_status"
@@ -230,6 +252,14 @@ class FLClientNode:
             noise_id = str(getattr(self.dataset, "silo_id", None)
                            or self.client_id)
             self._ef = make_error_feedback(job, noise_id)
+        if job.device_fleet:
+            # device-fleet mode: this silo fronts its own cross-device
+            # population. Sharding is keyed by the silo dataset's seed so
+            # twin runs over the same silos sample the same fleets.
+            from repro.data.synthetic import make_device_shards
+            self.fleet = make_device_shards(
+                self.dataset, job.devices_per_silo,
+                seed=int(getattr(self.dataset, "seed", 0)))
         self.metadata.record_provenance(
             actor=self.client_id, operation="fetch_job", subject=job.job_id,
             outcome="configured", details={"arch": job.arch})
@@ -238,40 +268,95 @@ class FLClientNode:
         return shared_step(self.job.arch, self.job.reduced,
                            self.job.optimizer, lr)
 
-    def _local_batch(self):
-        batch = self.dataset.batch(self.job.batch_size)
+    def _batch_from(self, dataset):
+        batch = dataset.batch(self.job.batch_size)
         if self.job.preprocessing:
             batch = apply_preprocessing(batch, self.job.preprocessing)
         return {k: jnp.asarray(v) for k, v in batch.items()}
 
-    def _train_local(self, base_params, lr: float):
-        """Model Trainer: the job's local steps on private data, from
+    def _local_batch(self):
+        return self._batch_from(self.dataset)
+
+    def _fit(self, dataset, base_params, lr: float):
+        """Model Trainer: the job's local steps on ``dataset``, from
         ``base_params``. Returns ``(params, loss, n_examples)`` —
-        n_examples is the nominal training budget capped by the silo's
-        declared dataset size (a silo smaller than the budget carries
-        proportionally less FedAvg weight; for masked rounds its
+        n_examples is the nominal training budget capped by the dataset's
+        declared size (a silo or device smaller than the budget carries
+        proportionally less FedAvg weight; for masked rounds the silo's
         pre-scale factor stays <= 1, so masking strength is preserved).
-        Shared by the sync round and the async continuous loop, so the
-        two protocols can never drift on training/weighting semantics."""
+        One loop for every tier and protocol: the flat sync round, the
+        async continuous loop and each simulated device's inner-round
+        training all run exactly this, so tiers can never drift on
+        training/weighting semantics."""
         opt, train_step = self._get_step(lr)
         params = base_params
         opt_state = opt.init(params)
         loss = np.nan
         for _ in range(self.job.local_steps):
-            batch = self._local_batch()
+            batch = self._batch_from(dataset)
             params, opt_state, metrics = train_step(params, opt_state, batch)
             loss = float(metrics["loss"])
         n_examples = self.job.local_steps * self.job.batch_size
-        declared = getattr(self.dataset, "n_examples", None)
+        declared = getattr(dataset, "n_examples", None)
         if declared is not None:             # 0 means a truly empty silo
             n_examples = min(n_examples, int(declared))
+        return params, loss, n_examples
+
+    def run_inner_round(self, base_params, lr: float, rnd: int = 0):
+        """The round's local contribution, tier-aware (the tentpole's
+        replacement for the old ``_train_local``).
+
+        Flat silo (no device fleet): one ``_fit`` over the silo's own
+        data — byte-identical to the historical behaviour. Device-fleet
+        mode: drive the ``IntraSiloProtocol`` over a sampled device
+        cohort via an ``InnerRoundEngine`` and return the silo's
+        pre-aggregated result. Either way the return contract is
+        ``(params, loss, n_examples)``, so the outer wire format — and
+        everything layered on it: secure-agg, int8/topk compression, DP
+        — composes without knowing the silo is a mini-aggregator.
+
+        ``inner_hooks`` fire at the boundary (both modes, so tier-aware
+        ``drop_at`` specs behave uniformly); a hook may raise
+        ``InnerRoundAborted`` to kill this silo's round before anything
+        is trained or posted.
+        """
+        for hook in list(self.inner_hooks):
+            hook(self.client_id, rnd, "enter")
+        if self.fleet is None:
+            result = self._fit(self.dataset, base_params, lr)
+            for hook in list(self.inner_hooks):
+                hook(self.client_id, rnd, "exit")
+            return result
+        engine = InnerRoundEngine(self, rnd, lr, base_params)
+        tel = self.telemetry
+        with tel.span("client.inner_round", cat="client",
+                      actor=self.client_id, run_id=self.run_id,
+                      attrs={"round": rnd}) as sp:
+            params, loss, n_examples = engine.run()
+            sp.set(sampled=len(engine.cohort), dropped=len(engine.dropped),
+                   folded=engine.folded, loss=float(loss))
+        per_sec = engine.folded / engine.elapsed if engine.elapsed else 0.0
+        m = tel.metrics
+        m.counter("fleet.devices_folded").inc(engine.folded)
+        m.counter("fleet.devices_dropped").inc(len(engine.dropped))
+        m.counter("fleet.inner_rounds").inc()
+        self.metadata.record_provenance(
+            actor=self.client_id, operation="inner_round",
+            subject=f"{self.run_id}/r{rnd}", outcome="folded",
+            details={"round": rnd, "sampled": len(engine.cohort),
+                     "dropped": len(engine.dropped),
+                     "folded": engine.folded,
+                     "devices_per_sec": per_sec,
+                     "peak_fold_bytes": engine.peak_fold_bytes})
+        for hook in list(self.inner_hooks):
+            hook(self.client_id, rnd, "exit")
         return params, loss, n_examples
 
     def _do_round(self, status) -> str:
         rnd, hp = status["round"], status["hp_index"]
         if self.round_done >= rnd and self.hp_seen == hp:
             return "round_already_done"
-        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        base = f"{self.ns}/round/{hp}/{rnd}"
         tel = self.telemetry
         with tel.span("client.fetch", cat="client", actor=self.client_id,
                       run_id=self.run_id, attrs={"round": rnd}):
@@ -279,11 +364,18 @@ class FLClientNode:
         if msg is None:
             return "waiting_global"
         base_params = jax.tree.map(jnp.asarray, msg["params"])
-        with tel.span("client.train", cat="client", actor=self.client_id,
-                      run_id=self.run_id, attrs={"round": rnd}) as sp:
-            params, loss, n_examples = self._train_local(
-                base_params, float(status.get("lr", self.job.lr)))
-            sp.set(loss=float(loss))
+        try:
+            with tel.span("client.train", cat="client",
+                          actor=self.client_id, run_id=self.run_id,
+                          attrs={"round": rnd}) as sp:
+                params, loss, n_examples = self.run_inner_round(
+                    base_params, float(status.get("lr", self.job.lr)), rnd)
+                sp.set(loss=float(loss))
+        except InnerRoundAborted:
+            # a boundary hook killed this silo's round (tier-aware fault
+            # injection): vanish without posting — the server's dropout
+            # machinery takes it from here
+            return "inner_round_aborted"
         comp_sp = tel.span("client.compress", cat="client",
                            actor=self.client_id, run_id=self.run_id,
                            attrs={"round": rnd})
@@ -370,7 +462,7 @@ class FLClientNode:
         absorbs (fast silos contribute more updates, slow silos' stale
         updates are down-weighted, nobody stalls anybody)."""
         rnd, hp = status["round"], status["hp_index"]
-        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        base = f"{self.ns}/round/{hp}/{rnd}"
         # an async silo contributes several updates against one commit's
         # global — conditional fetch re-downloads it only when the server
         # actually committed a new one
@@ -379,12 +471,15 @@ class FLClientNode:
             return "waiting_global"
         tel = self.telemetry
         base_params = jax.tree.map(jnp.asarray, msg["params"])
-        with tel.span("client.train", cat="client", actor=self.client_id,
-                      run_id=self.run_id,
-                      attrs={"base_commit": rnd}) as sp:
-            params, loss, n_examples = self._train_local(
-                base_params, float(status.get("lr", self.job.lr)))
-            sp.set(loss=float(loss))
+        try:
+            with tel.span("client.train", cat="client",
+                          actor=self.client_id, run_id=self.run_id,
+                          attrs={"base_commit": rnd}) as sp:
+                params, loss, n_examples = self.run_inner_round(
+                    base_params, float(status.get("lr", self.job.lr)), rnd)
+                sp.set(loss=float(loss))
+        except InnerRoundAborted:
+            return "inner_round_aborted"
         from repro.core.protocol import pack_delta
         delta = pack_delta(params, base_params)
         if self.job.compression != "none":
@@ -401,7 +496,7 @@ class FLClientNode:
         with tel.span("client.post", cat="client", actor=self.client_id,
                       run_id=self.run_id, attrs={"base_commit": rnd}):
             self.comm.post(
-                f"runs/{self.run_id}/async/update/{self.client_id}", payload)
+                f"{self.ns}/async/update/{self.client_id}", payload)
         self.metadata.record_provenance(
             actor=self.client_id, operation="local_train_async",
             subject=f"{self.run_id}/c{rnd}", outcome="update_posted",
@@ -413,7 +508,7 @@ class FLClientNode:
         my pairwise masks against the dropped peers and post the packed
         correction buffer so the server can telescope the survivor sum."""
         rnd, hp = status["round"], status["hp_index"]
-        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        base = f"{self.ns}/round/{hp}/{rnd}"
         info = self.comm.fetch(f"{base}/dropout", broadcast=True)
         if info is None:
             return "waiting_dropout"
@@ -475,7 +570,7 @@ class FLClientNode:
         rnd, hp = status["round"], status["hp_index"]
         if self.eval_done >= rnd and self.eval_hp == hp:
             return "eval_already_done"
-        base = f"runs/{self.run_id}/round/{hp}/{rnd}"
+        base = f"{self.ns}/round/{hp}/{rnd}"
         # Model Evaluator: private held-out batches on the latest global
         # (the new aggregate is distributed next round; this round's global
         # is the model this client can evaluate without a push)
@@ -495,8 +590,8 @@ class FLClientNode:
     def _do_deploy(self) -> str:
         if self.deployed_digest is not None:
             return self._monitor_deployed()
-        rel = self.comm.fetch(f"runs/{self.run_id}/release", broadcast=True)
-        blob = self.comm.fetch(f"runs/{self.run_id}/release/params",
+        rel = self.comm.fetch(f"{self.ns}/release", broadcast=True)
+        blob = self.comm.fetch(f"{self.ns}/release/params",
                                broadcast=True)
         if rel is None or blob is None:
             return "waiting_release"
@@ -585,6 +680,166 @@ class FLClientNode:
         return np.stack(out, axis=1)
 
 
+class DeviceNode:
+    """One simulated edge device in a silo's fleet (DESIGN.md
+    §Hierarchical federation). Deliberately tiny: it owns nothing but its
+    identity and its lazily-materialized data shard — the compiled train
+    step is the process-wide ``shared_step`` executable and the silo's
+    ``InnerRoundEngine`` drives sampling, clipping and folding.
+    ``__slots__`` because a 10k-device fleet materializes one of these
+    per sampled device per round."""
+
+    __slots__ = ("device_index", "shard")
+
+    def __init__(self, device_index: int, shard):
+        self.device_index = device_index
+        self.shard = shard
+
+    def train(self, node: "FLClientNode", base_params, lr: float):
+        """The device's local steps: exactly the silo's ``_fit`` loop on
+        the device's own shard, so the two tiers can never drift on
+        training/weighting semantics."""
+        return node._fit(self.shard, base_params, lr)
+
+
+class InnerRoundEngine:
+    """Silo-side executor of the ``IntraSiloProtocol`` — the inner-tier
+    mirror of ``FLServer.tick()``'s thin-executor contract: the protocol's
+    phases own the round shape (sample → train/fold → done), the engine
+    just holds the inner round's state and polls the active phase.
+
+    The fold is the same O(T) streaming discipline the outer server uses
+    (``core/streaming.py``): each device's clipped packed delta folds
+    into a ``MaskedF32Sink`` weighted by its example count the moment the
+    device finishes training, then is dropped — the engine never holds a
+    (K, T) cohort matrix, so a 10k-device fleet costs the same
+    accumulator memory as a 10-device one (check_regression gates this).
+    """
+
+    # bounded training batch per poll: ticks stay cooperative, so a silo
+    # agent can interleave other jobs between inner polls if it drives
+    # the engine tick-by-tick instead of via run()
+    DEVICES_PER_POLL = 32
+
+    def __init__(self, node: FLClientNode, rnd: int, lr: float,
+                 base_params):
+        from repro.core.protocol import IntraSiloProtocol
+        self.node = node
+        self.job = node.job
+        self.round = int(rnd)
+        self.lr = float(lr)
+        self.base_params = base_params
+        self.protocol = IntraSiloProtocol()
+        self.phase = self.protocol.initial
+        self.cohort: List[int] = []       # sampled device indices
+        self.dropped: List[int] = []      # Bernoulli-dropped subset
+        self._queue: List[int] = []       # survivors still to train
+        self._single_mode = False
+        self._single = None               # (params, loss, n) shortcut
+        self.sink = None                  # lazy MaskedF32Sink
+        self.folded = 0
+        self.loss_sum = 0.0
+        self.weight_sum = 0
+        self.elapsed = 0.0
+
+    @property
+    def peak_fold_bytes(self) -> int:
+        return 0 if self.sink is None else int(self.sink.peak_bytes)
+
+    # --- executor ------------------------------------------------------
+    def tick(self) -> str:
+        """One poll cycle, same transition contract as FLServer.tick()."""
+        nxt = self.protocol.phase(self.phase).poll(self)
+        if nxt is not None and nxt != self.phase:
+            self.phase = nxt
+            self.protocol.phase(self.phase).enter(self)
+        return self.phase
+
+    def run(self):
+        """Drive the inner protocol to its terminal phase and return the
+        silo's pre-aggregated ``(params, loss, n_examples)``."""
+        t0 = time.perf_counter()
+        while not self.protocol.phase(self.phase).terminal:
+            self.tick()
+        self.elapsed = time.perf_counter() - t0
+        return self.result()
+
+    # --- phase callbacks (invoked by the IntraSiloProtocol phases) -----
+    def sample_cohort(self):
+        from repro.core import protocol
+        job, node = self.job, self.node
+        silo = getattr(node.dataset, "silo_id", node.client_id)
+        seed = int(getattr(node.dataset, "seed", 0))
+        self.cohort = protocol.sample_device_cohort(
+            silo, seed, self.round, job.devices_per_silo,
+            job.device_cohort_size)
+        self.dropped = protocol.sample_device_dropout(
+            silo, seed, self.round, self.cohort, job.device_dropout)
+        gone = set(self.dropped)
+        self._queue = [d for d in self.cohort if d not in gone]
+        # exactly one surviving device: return its trained params as-is.
+        # The mean of one delta IS that delta, and skipping the
+        # pack/unpack round trip keeps the degenerate one-device fleet
+        # bit-for-bit identical to the flat silo (the twin test's anchor).
+        self._single_mode = len(self._queue) == 1
+
+    def train_some(self) -> bool:
+        take = self._queue[:self.DEVICES_PER_POLL]
+        self._queue = self._queue[self.DEVICES_PER_POLL:]
+        for idx in take:
+            self._train_device(idx)
+        return not self._queue
+
+    def _train_device(self, idx: int):
+        node = self.node
+        dev = DeviceNode(idx, node.fleet.shard(idx, self.round))
+        tel = node.telemetry
+        with tel.span("device.train", cat="device",
+                      actor=f"{node.client_id}/dev{idx}",
+                      run_id=node.run_id,
+                      attrs={"round": self.round, "device": idx}) as sp:
+            params, loss, n = dev.train(node, self.base_params, self.lr)
+            sp.set(loss=float(loss), n_examples=int(n))
+        self.loss_sum += float(loss) * int(n)
+        self.weight_sum += int(n)
+        self.folded += 1
+        if self._single_mode:
+            self._single = (params, float(loss), int(n))
+            return
+        from repro.core.protocol import pack_delta
+        delta = pack_delta(params, self.base_params)
+        clip = float(self.job.device_clip)
+        if clip > 0.0:
+            norm = float(np.linalg.norm(delta))
+            if norm > clip:
+                delta *= np.float32(clip / norm)
+        if self.sink is None:
+            from repro.core import streaming
+            self.sink = streaming.MaskedF32Sink(
+                delta.shape[0], telemetry=tel, run_id=node.run_id)
+        self.sink.fold(delta, float(n))
+
+    def result(self):
+        if self._single is not None:
+            return self._single
+        if self.sink is None:
+            raise RuntimeError("inner round folded no devices")
+        from repro.core.packing import PackedLayout, unpack_pytree
+        loss = self.loss_sum / float(self.weight_sum)
+        # weighted FedAvg over the surviving device cohort: the sink's
+        # weighted sum of clipped deltas divided by the total example
+        # weight, applied to the silo's base params
+        total = self.sink.finalize()
+        mean = total / np.float32(self.weight_sum)
+        layout = PackedLayout.for_tree(self.base_params)
+        delta_tree = unpack_pytree(mean, layout)
+        params = jax.tree.map(
+            lambda p, d: np.asarray(p, np.float32)
+            + np.asarray(d, np.float32).reshape(np.shape(p)),
+            self.base_params, delta_tree)
+        return params, float(loss), int(self.weight_sum)
+
+
 class OversubscribedError(RuntimeError):
     """A silo was asked to serve more concurrent jobs than it declared."""
 
@@ -612,7 +867,12 @@ class ClientAgent:
         self.dataset = dataset
         self.capacity = int(capacity)
         self.config = config
-        self.metadata = metadata or MetadataStore()
+        # `is None`, not truthiness (the thrice-fixed bug class, now
+        # guarded by tests/test_truthiness_guard.py): the scheduler hands
+        # every agent the federation's shared — and initially empty,
+        # hence falsy — MetadataStore; `or` would silently replace it and
+        # split this silo's provenance off the shared trail
+        self.metadata = MetadataStore() if metadata is None else metadata
         self.tick_every = max(1, int(tick_every))
         self.nodes: Dict[str, FLClientNode] = {}    # run_id -> node (kept
         self.active: List[str] = []                 # after release, for

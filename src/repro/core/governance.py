@@ -73,6 +73,14 @@ DEFAULT_DECISIONS = {
     "dp_delta": 1e-5,                 # per-round δ of the Gaussian mechanism
     "dp_clip": 1.0,                   # per-silo L2 clip on the weighted delta
     "dp_seed": 0,                     # base seed of per-silo noise streams
+    # hierarchical device fleets (DESIGN.md §Hierarchical federation):
+    # each silo fronts its own cross-device population and posts one
+    # pre-aggregated delta upward; the fleet shape is negotiated like
+    # every other decision (inner tier itself is always plain FedAvg)
+    "devices_per_silo": 1,            # 1 = flat silo, no inner tier
+    "device_cohort_size": 0,          # devices sampled per round (0 = all)
+    "device_dropout": 0.0,            # Bernoulli per-device dropout prob
+    "device_clip": 0.0,               # L2 clip per device delta (0 = off)
 }
 
 

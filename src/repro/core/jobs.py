@@ -101,6 +101,29 @@ class FLJob:
     dp_delta: float = 1e-5
     dp_clip: float = 1.0
     dp_seed: int = 0
+    # hierarchical device fleets (DESIGN.md §Hierarchical federation):
+    #   devices_per_silo — size of the simulated cross-device population
+    #     behind each silo (1 = flat silo; >1 turns the silo into a
+    #     mini-aggregator running an IntraSiloProtocol per outer round).
+    #   device_cohort_size — devices sampled per outer round (0 = the
+    #     whole fleet). devices_per_silo=1 with device_cohort_size=1
+    #     routes through the inner engine and reproduces the flat silo
+    #     bit-for-bit through the outer wire (tests pin this twin).
+    #   device_dropout — Bernoulli per-device dropout probability over
+    #     the sampled cohort (a phone goes offline mid-round); the inner
+    #     fold simply re-weights over the survivors, never below one.
+    #   device_clip — L2 clip applied to each device's packed delta
+    #     before the inner fold (0 = off): bounds any single device's
+    #     pull on the silo's posted update.
+    devices_per_silo: int = 1
+    device_cohort_size: int = 0
+    device_dropout: float = 0.0
+    device_clip: float = 0.0
+
+    @property
+    def device_fleet(self) -> bool:
+        """True when the job runs the inner cross-device tier."""
+        return self.devices_per_silo > 1 or self.device_cohort_size > 0
 
     def to_dict(self) -> dict:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -176,6 +199,10 @@ class JobCreator:
             dp_delta=float(d.get("dp_delta", 1e-5)),
             dp_clip=float(d.get("dp_clip", 1.0)),
             dp_seed=int(d.get("dp_seed", 0)),
+            devices_per_silo=int(d.get("devices_per_silo", 1)),
+            device_cohort_size=int(d.get("device_cohort_size", 0)),
+            device_dropout=float(d.get("device_dropout", 0.0)),
+            device_clip=float(d.get("device_clip", 0.0)),
         )
 
     def _reject(self, d: dict, subject, reason: str, message: str):
@@ -187,18 +214,26 @@ class JobCreator:
         whole tuple, because the matrix rejects *combinations*, never
         individual values.
         """
+        decisions = {
+            "secure_aggregation": bool(d.get("secure_aggregation", True)),
+            "compression": d.get("compression", "none"),
+            "protocol": d.get("protocol", "sync"),
+            "aggregation": d.get("aggregation", "fedavg"),
+            "dp_epsilon": float(d.get("dp_epsilon", 0.0) or 0.0),
+            "hyperparameter_search": bool(d.get("hyperparameter_search")),
+        }
+        # fleet keys join the snapshot only when a fleet is declared: a
+        # flat job's offending combination doesn't involve them, and the
+        # golden provenance tests pin the flat shape
+        devices = int(d.get("devices_per_silo", 1))
+        dev_cohort = int(d.get("device_cohort_size", 0))
+        if devices > 1 or dev_cohort > 0:
+            decisions["devices_per_silo"] = devices
+            decisions["device_cohort_size"] = dev_cohort
         self.metadata.record_provenance(
             actor="job_creator", operation="create_job",
             subject=str(subject), outcome="rejected",
-            details={"reason": reason, "decisions": {
-                "secure_aggregation": bool(d.get("secure_aggregation",
-                                                 True)),
-                "compression": d.get("compression", "none"),
-                "protocol": d.get("protocol", "sync"),
-                "aggregation": d.get("aggregation", "fedavg"),
-                "dp_epsilon": float(d.get("dp_epsilon", 0.0) or 0.0),
-                "hyperparameter_search":
-                    bool(d.get("hyperparameter_search"))}})
+            details={"reason": reason, "decisions": decisions})
         raise ValueError(message)
 
     def _validate(self, d: dict):
@@ -262,6 +297,35 @@ class JobCreator:
                     "boundary to restart from)")
             if int(d.get("async_buffer_size", 4)) < 1:
                 raise ValueError("async_buffer_size must be >= 1")
+        # --- hierarchical device fleets ----------------------------------
+        # The inner tier is always plain FedAvg (see IntraSiloProtocol):
+        # per-device deltas fold inside the silo's own trust domain, and
+        # pairwise masks across ephemeral per-round device cohorts never
+        # telescope — so there are no inner-tier privacy knobs to
+        # negotiate, only fleet shape. The *outer* planes (secure-agg,
+        # int8/topk, DP) compose unchanged: the silo posts one
+        # pre-aggregated delta on the standard wire format.
+        devices = int(d.get("devices_per_silo", 1))
+        dev_cohort = int(d.get("device_cohort_size", 0))
+        if devices < 1:
+            raise ValueError("devices_per_silo must be >= 1")
+        if dev_cohort < 0 or dev_cohort > devices:
+            raise ValueError(
+                "device_cohort_size must be in [0, devices_per_silo] "
+                "(0 = the whole fleet)")
+        if not 0.0 <= float(d.get("device_dropout", 0.0)) < 1.0:
+            raise ValueError("device_dropout must be in [0, 1)")
+        if float(d.get("device_clip", 0.0)) < 0:
+            raise ValueError("device_clip must be >= 0")
+        if (devices > 1 or dev_cohort > 0) and protocol == "async_buff":
+            self._reject(
+                d, protocol, "device_fleet requires protocol='sync'",
+                f"devices_per_silo={devices} is incompatible with "
+                f"protocol='async_buff': an inner round samples its "
+                f"device cohort at an outer-round boundary, and the "
+                f"buffered protocol's continuously-training silos have "
+                f"no such boundary to sample against (negotiate "
+                f"protocol='sync' for device fleets)")
         # --- compressed data plane compatibility matrix ------------------
         # allowed: plain/weighted sync fedavg, async_buff (staleness-
         # weighted folds consume dequantized deltas), secure+int8 (masks

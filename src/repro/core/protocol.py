@@ -37,6 +37,12 @@ every ``job.async_buffer_size`` folds — slow silos never stall fast ones,
 and a straggler's late update still contributes, just discounted. Masks
 cannot telescope across asynchronous folds, so job creation rejects
 ``secure_aggregation=True`` for this protocol (jobs.py).
+
+The phase machinery itself is tier-agnostic (no hardcoded board roots —
+paths hang off ``run.ns``; cohort identity and who publishes the global
+are the executor's business): ``IntraSiloProtocol`` reuses it as a silo's
+*inner* round engine over a sampled device cohort (DESIGN.md
+§Hierarchical federation).
 """
 from __future__ import annotations
 
@@ -165,14 +171,14 @@ class WaitingClientsPhase(Phase):
         r = server.run
         r.phase_ticks += 1
         hellos = server._poll_cohort(
-            lambda cid: f"runs/{r.run_id}/hello/{cid}", "hello")
+            lambda cid: f"{r.ns}/hello/{cid}", "hello")
         if hellos is None:
             return None
         return self.next_phase
 
     def wait_paths(self, server):
         r = server.run
-        return [f"runs/{r.run_id}/hello/{cid}" for cid in r.cohort]
+        return [f"{r.ns}/hello/{cid}" for cid in r.cohort]
 
 
 class ValidatingPhase(Phase):
@@ -191,7 +197,7 @@ class ValidatingPhase(Phase):
             return self.next_phase
         schema = DataSchema.from_dict(schema_d)
         stats = server._poll_cohort(
-            lambda cid: f"runs/{r.run_id}/validation/{cid}",
+            lambda cid: f"{r.ns}/validation/{cid}",
             "validation_stats")
         if stats is None:
             return None               # still waiting (pull model)
@@ -217,7 +223,7 @@ class ValidatingPhase(Phase):
         r = server.run
         if r.job.data_schema is None:
             return None               # nothing to validate: immediate
-        return [f"runs/{r.run_id}/validation/{cid}" for cid in r.cohort]
+        return [f"{r.ns}/validation/{cid}" for cid in r.cohort]
 
 
 # ---------------------------------------------------------------------------
@@ -232,18 +238,11 @@ class DistributePhase(Phase):
         r = server.run
         if r.job.gc_round_resources:
             self._gc_rounds_before(server, r.hp_index, r.round)
+        # masked rounds: clients mask against *this round's* cohort (it
+        # shrinks across rounds) and pre-scale their update by
+        # n_examples / weight_denom so weighted FedAvg telescopes
         r.round_cohort = list(r.cohort)
-        params = server.store.get(r.global_digest)
-        server.comm.publish(
-            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
-            {"digest": r.global_digest,
-             "params": jax.tree.map(np.asarray, params),
-             "round": r.round, "lr": server._job_lr(r.job),
-             # masked rounds: clients mask against *this round's* cohort
-             # (it shrinks across rounds) and pre-scale their update by
-             # n_examples / weight_denom so weighted FedAvg telescopes
-             "cohort": r.round_cohort,
-             "weight_denom": r.job.local_steps * r.job.batch_size})
+        server.publish_round_global(r.round_cohort)
         return "collect"
 
     @staticmethod
@@ -253,10 +252,12 @@ class DistributePhase(Phase):
         their globals redistributed — only the current round's resources
         are live. Keeps board memory bounded under many concurrent jobs."""
         r = server.run
-        for path in server.board.list(f"runs/{r.run_id}/round/*"):
-            parts = path.split("/")
+        for path in server.board.list(f"{r.ns}/round/*"):
+            # parse (hp, round) relative to the run's namespace root —
+            # the phase machinery must not assume how deep ns nests
+            parts = path[len(r.ns) + 1:].split("/")
             try:
-                key = (int(parts[3]), int(parts[4]))
+                key = (int(parts[1]), int(parts[2]))
             except (IndexError, ValueError):
                 continue
             if key < (hp, rnd):
@@ -303,7 +304,7 @@ class CollectPhase(Phase):
     def poll(self, server):
         r = server.run
         r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         st = r.proto.setdefault("collect_stream", self._fresh_stream())
 
         def arrive(cid, m):
@@ -342,7 +343,7 @@ class CollectPhase(Phase):
 
     def wait_paths(self, server):
         r = server.run
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         return [f"{base}/update/{cid}" for cid in r.cohort]
 
 
@@ -362,7 +363,7 @@ class RepairPhase(Phase):
         from repro.core import streaming
         r = server.run
         r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         pending = r.pending_round
         sink_updates = (pending["updates"] if isinstance(
             pending["updates"], streaming.StreamedUpdates) else None)
@@ -439,7 +440,7 @@ class RepairPhase(Phase):
 
     def wait_paths(self, server):
         r = server.run
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         return [f"{base}/repair/{r.repair_epoch}/{cid}" for cid in r.cohort]
 
 
@@ -456,7 +457,7 @@ class EvaluatePhase(Phase):
     def poll(self, server):
         r = server.run
         r.phase_ticks += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         evals = server._poll_cohort(lambda cid: f"{base}/eval/{cid}",
                                     "round_eval")
         if evals is None:
@@ -495,7 +496,7 @@ class EvaluatePhase(Phase):
 
     def wait_paths(self, server):
         r = server.run
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         return [f"{base}/eval/{cid}" for cid in r.cohort]
 
 
@@ -508,11 +509,11 @@ class DeployingPhase(Phase):
         r = server.run
         best = min(r.history, key=lambda h: h.get("mean_eval_loss",
                                                   float("inf")))
-        server.comm.publish(f"runs/{r.run_id}/release", {
+        server.comm.publish(f"{r.ns}/release", {
             "digest": best["digest"], "round": best["round"],
             "mean_eval_loss": best.get("mean_eval_loss")})
         params = server.store.get(best["digest"])
-        server.comm.publish(f"runs/{r.run_id}/release/params", {
+        server.comm.publish(f"{r.ns}/release/params", {
             "digest": best["digest"],
             "params": jax.tree.map(np.asarray, params)})
         server.metadata.record_run_end(r.run_id, "completed",
@@ -549,7 +550,7 @@ class SyncProtocol(Protocol):
         if aggregated:
             return "evaluate"
         r.round_attempt += 1
-        base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+        base = f"{r.ns}/round/{r.hp_index}/{r.round}"
         for path in server.board.list(f"{base}/*"):
             server.board.delete(path)
         return "validating"
@@ -612,15 +613,7 @@ class AsyncServePhase(Phase):
         self._publish_commit(server)
 
     def _publish_commit(self, server):
-        r = server.run
-        params = server.store.get(r.global_digest)
-        server.comm.publish(
-            f"runs/{r.run_id}/round/{r.hp_index}/{r.round}/global",
-            {"digest": r.global_digest,
-             "params": jax.tree.map(np.asarray, params),
-             "round": r.round, "lr": server._job_lr(r.job),
-             "cohort": list(r.cohort),
-             "weight_denom": r.job.local_steps * r.job.batch_size})
+        server.publish_round_global(server.run.cohort)
 
     def poll(self, server):
         r = server.run
@@ -628,7 +621,7 @@ class AsyncServePhase(Phase):
         # overwrite detection across the whole cohort in one batched
         # metadata sweep — the async server polls every tick, so this is
         # the hottest probe path in the buffered protocol
-        paths = {cid: f"runs/{r.run_id}/async/update/{cid}"
+        paths = {cid: f"{r.ns}/async/update/{cid}"
                  for cid in r.cohort}
         metas = server.board.stat_many(paths.values())
         for cid in r.cohort:
@@ -733,9 +726,10 @@ class AsyncServePhase(Phase):
             # prior commits' globals are spent the moment a newer one is
             # published (clients always fetch the status round's global)
             for path in server.board.list(
-                    f"runs/{r.run_id}/round/{r.hp_index}/*/global"):
+                    f"{r.ns}/round/{r.hp_index}/*/global"):
                 try:
-                    if int(path.split("/")[4]) < r.round:
+                    rel = path[len(r.ns) + 1:].split("/")
+                    if int(rel[2]) < r.round:
                         server.board.delete(path)
                 except (IndexError, ValueError):
                     continue
@@ -744,7 +738,7 @@ class AsyncServePhase(Phase):
 
     def wait_paths(self, server):
         r = server.run
-        return [f"runs/{r.run_id}/async/update/{cid}" for cid in r.cohort]
+        return [f"{r.ns}/async/update/{cid}" for cid in r.cohort]
 
     def wake(self, server):
         # the watched resources are overwritten in place, so "missing"
@@ -797,6 +791,117 @@ class AsyncBuffProtocol(Protocol):
                          and "mean_eval_loss" in r.history[-1])
             return "deploying" if evaluated else "evaluate"
         return "async_serve"
+
+
+# ---------------------------------------------------------------------------
+# intra-silo tier (DESIGN.md §Hierarchical federation)
+#
+# The phase machinery above is tier-agnostic on purpose: a Phase only ever
+# talks to the executor it is handed. The outer tier's executor is
+# FLServer (board paths under ``run.ns``, cohort of silo client ids, the
+# server publishes the global); the inner tier's executor is a silo's
+# ``InnerRoundEngine`` (core/client.py) — no board at all, a cohort of
+# device *indices* sampled per outer round, and the silo itself holding
+# the base params. ``IntraSiloProtocol`` is deliberately NOT registered in
+# PROTOCOLS: it is not a negotiable job-level protocol but the recursive
+# round engine a device-fleet silo instantiates per outer round.
+# ---------------------------------------------------------------------------
+def _device_rng(silo_id, seed: int, rnd: int, tag: int):
+    """Deterministic per-(silo, seed, round, purpose) generator. Uses the
+    silo's hashed string identity (data.synthetic.silo_key), never
+    Python's per-process ``hash``."""
+    from repro.data.synthetic import silo_key
+    return np.random.default_rng(np.random.SeedSequence(
+        [int(seed) % (2 ** 63), silo_key(silo_id), int(rnd), int(tag)]))
+
+
+def sample_device_cohort(silo_id, seed: int, rnd: int, n_devices: int,
+                         cohort_size: int) -> List[int]:
+    """Sample the inner round's device cohort — a pure function of
+    ``(silo_id, seed, rnd)``, so a re-run (resume, twin bench, repaired
+    attempt) samples the same devices. ``cohort_size <= 0`` means the
+    whole fleet participates."""
+    n = int(n_devices)
+    k = n if int(cohort_size) <= 0 else min(int(cohort_size), n)
+    if k >= n:
+        return list(range(n))
+    rng = _device_rng(silo_id, seed, rnd, 0xC0)
+    return sorted(rng.choice(n, size=k, replace=False).tolist())
+
+
+def sample_device_dropout(silo_id, seed: int, rnd: int,
+                          cohort: Sequence[int], p: float) -> List[int]:
+    """Bernoulli(p) device dropout over the sampled cohort, deterministic
+    in ``(silo_id, seed, rnd)``. Never empties the cohort: if every
+    sampled device drops, the first sampled device is kept — an inner
+    round with zero survivors would post a zero-weight update and poison
+    the outer weighted mean, so the guard is part of the contract."""
+    if float(p) <= 0.0 or not cohort:
+        return []
+    rng = _device_rng(silo_id, seed, rnd, 0xD0)
+    mask = rng.random(len(cohort)) < float(p)
+    dropped = [d for d, m in zip(cohort, mask) if m]
+    if len(dropped) == len(cohort):
+        dropped = dropped[1:]
+    return dropped
+
+
+class DeviceSamplePhase(Phase):
+    """Sample the outer round's device cohort and its dropout set."""
+
+    name = "device_sample"
+
+    def poll(self, engine):
+        engine.sample_cohort()
+        return "device_train"
+
+
+class DeviceTrainPhase(Phase):
+    """Train-and-fold a bounded batch of surviving devices per poll.
+
+    The inner tier's analogue of the streaming collect: each device's
+    clipped packed delta is folded into the engine's O(T) sink the moment
+    it finishes training, and dropped — polls stay cooperative (the silo
+    agent can interleave other jobs' ticks) and the fleet never
+    materializes as a (K, T) matrix."""
+
+    name = "device_train"
+
+    def poll(self, engine):
+        return "inner_done" if engine.train_some() else None
+
+
+class InnerDonePhase(Phase):
+    name = "inner_done"
+    terminal = True
+
+    def poll(self, engine):
+        return None
+
+
+class IntraSiloProtocol(Protocol):
+    """The recursive inner round program a device-fleet silo runs per
+    outer round: device_sample → device_train → inner_done.
+
+    The inner tier is plain FedAvg *only* (jobs.py matrix): per-device
+    deltas fold in the clear inside the silo's own trust domain, where
+    the silo already sees its devices' raw data — masking adds nothing.
+    Pairwise secure-agg masks would not telescope anyway: they cancel
+    across a *stable* cohort, and inner cohorts are ephemeral 5%-ish
+    samples that change every round, so the mask graph never closes.
+    Privacy toward the *federation* is the outer tier's job, and it
+    composes unchanged because the silo posts one pre-aggregated delta
+    on the standard wire format.
+    """
+
+    name = "intra_silo"
+    initial = "device_sample"
+
+    def build_phases(self):
+        return (DeviceSamplePhase(), DeviceTrainPhase(), InnerDonePhase())
+
+    def resume(self, engine) -> str:
+        return "device_sample"    # an interrupted inner round re-runs whole
 
 
 PROTOCOLS = {

@@ -78,6 +78,11 @@ class ModelStore:
 class RunState:
     run_id: str
     job: FLJob
+    # board namespace root every run resource hangs off. The phase
+    # machinery (protocol.py) only ever builds paths relative to this,
+    # so the round program is tier/namespace-agnostic (DESIGN.md
+    # §Hierarchical federation); defaults to the flat "runs/<id>" root.
+    ns: str = ""
     phase: str = "waiting_clients"
     round: int = 0
     cohort: List[str] = field(default_factory=list)
@@ -101,6 +106,10 @@ class RunState:
     outer_state: Any = None
     # --- protocol-private state (e.g. the async fold buffer) -------------
     proto: Dict[str, Any] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.ns:
+            self.ns = f"runs/{self.run_id}"
 
 
 class FLServer:
@@ -195,9 +204,9 @@ class FLServer:
         self.run.init_digest = digest
         # publish job + per-client session info (token distribution would be
         # out-of-band in production; modelled via per-client channel here)
-        self.comm.publish(f"runs/{run_id}/job", job.to_dict())
+        self.comm.publish(f"{self.run.ns}/job", job.to_dict())
         for cid in self.run.cohort:
-            self.comm.publish(f"runs/{run_id}/session/{cid}",
+            self.comm.publish(f"{self.run.ns}/session/{cid}",
                               {"token_issued": True, "run_id": run_id},
                               client_id=cid)
         self.protocol.phase(self.run.phase).enter(self)
@@ -244,9 +253,25 @@ class FLServer:
             return float(hp["values"][self.run.hp_index])
         return job.lr
 
+    def publish_round_global(self, cohort: List[str]):
+        """Publish the current round/commit's global model on the round's
+        broadcast channel. Single-sourced "who publishes the global":
+        both the sync distribute phase and the async commit loop go
+        through here, and an inner-tier executor replaces it wholesale
+        (the silo hands base params to its devices directly — no board)."""
+        r = self.run
+        params = self.store.get(r.global_digest)
+        self.comm.publish(
+            f"{r.ns}/round/{r.hp_index}/{r.round}/global",
+            {"digest": r.global_digest,
+             "params": jax.tree.map(np.asarray, params),
+             "round": r.round, "lr": self._job_lr(r.job),
+             "cohort": list(cohort),
+             "weight_denom": r.job.local_steps * r.job.batch_size})
+
     def _publish_status(self):
         r = self.run
-        self.comm.publish(f"runs/{r.run_id}/status", {
+        self.comm.publish(f"{r.ns}/status", {
             "phase": r.phase, "round": r.round, "hp_index": r.hp_index,
             "global_digest": r.global_digest,
             "lr": self._job_lr(r.job),
@@ -636,7 +661,7 @@ class FLServer:
             # the round's updates (and any repair corrections) are spent
             # the moment the aggregate is committed — they are the bulk of
             # the board's bytes, so free them immediately
-            base = f"runs/{r.run_id}/round/{r.hp_index}/{r.round}"
+            base = f"{r.ns}/round/{r.hp_index}/{r.round}"
             for pattern in (f"{base}/update/*", f"{base}/repair/*"):
                 for path in self.board.list(pattern):
                     self.board.delete(path)
@@ -650,9 +675,9 @@ class FLServer:
         if self.run is None:
             raise RuntimeError("no run")
         params = self.store.get(digest)
-        self.comm.publish(f"runs/{self.run.run_id}/release",
+        self.comm.publish(f"{self.run.ns}/release",
                           {"digest": digest, "forced_by": admin})
-        self.comm.publish(f"runs/{self.run.run_id}/release/params",
+        self.comm.publish(f"{self.run.ns}/release/params",
                           {"digest": digest,
                            "params": jax.tree.map(np.asarray, params)})
         self.metadata.record_provenance(

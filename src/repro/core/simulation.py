@@ -95,7 +95,8 @@ class Consortium:
 
     def run_to_completion(self, max_ticks: int = 10_000,
                           drop_at: Optional[dict] = None,
-                          target_loss: Optional[float] = None) -> str:
+                          target_loss: Optional[float] = None,
+                          on_phase=None) -> str:
         """Drive the scheduler until this consortium's job is terminal.
 
         ``drop_at`` injects client dropout: ``{org_or_client_id: when}``
@@ -104,13 +105,24 @@ class Consortium:
         (vanishes, no farewell message) the first time the server reports
         that phase at that round (for async jobs, round = commit index).
         E.g. ``{"solarx": ("collect", 1)}`` kills solarx right as round
-        1's collect opens, before it can post its update.
+        1's collect opens, before it can post its update. Tier-aware:
+        ``("inner_round", r)`` kills the silo at its *own* inner-round
+        boundary for outer round ``r`` — before its device cohort trains
+        and before anything is posted (the boundary hook raises
+        ``InnerRoundAborted`` inside the silo's tick).
+
+        ``on_phase(run_id, phase)`` observes every server phase report,
+        and additionally fires as ``on_phase(run_id, "inner_round")``
+        whenever one of this consortium's silos enters an inner round —
+        the inner tier has no server phase, so the hook is the only
+        uniform way to watch both tiers.
 
         ``target_loss`` stops early — returns ``"target_reached"`` the
         first pass a committed history entry's ``mean_train_loss`` is at
         or below it. That is the time-to-target probe benchmarks use to
         compare protocols (sync rounds vs async commits) on equal terms.
         """
+        from repro.core.client import InnerRoundAborted
         sched, run_id = self.scheduler, self.run_id
         entry = sched.entries[run_id]
         if (entry.state == "suspended"
@@ -118,28 +130,63 @@ class Consortium:
             sched.reactivate(run_id)        # admin resumed a paused run
         specs = {self._cid(k): v for k, v in (drop_at or {}).items()}
         dead = set()
-        for t in range(max_ticks):
-            def on_phase(rid, phase, _t=t):
-                if rid != run_id:
-                    return
-                run = self.server.run
-                for cid, when in specs.items():
-                    if cid in dead:
-                        continue
-                    if isinstance(when, int):
-                        if _t >= when:
-                            dead.add(cid)
-                            sched.drop_client(run_id, cid)
-                    elif run is not None and phase == when[0] \
-                            and run.round == when[1]:
-                        dead.add(cid)
-                        sched.drop_client(run_id, cid)
-            sched.step(on_phase=on_phase)
-            if target_loss is not None and any(
-                    h.get("mean_train_loss", float("inf")) <= target_loss
-                    for h in self.server.run.history):
-                return "target_reached"
-            phase = self.server.run.phase
-            if phase in ("done", "paused"):
-                return phase
+        # the closures below read the driver's current pass through this
+        # explicit shared cell — one binding, stated once, instead of the
+        # old per-iteration `_t=t` default-argument trick (the late-
+        # binding footgun ruff's B023 exists for)
+        current = {"pass": 0}
+
+        def drop(cid):
+            dead.add(cid)
+            sched.drop_client(run_id, cid)
+
+        def is_inner(when):
+            return (isinstance(when, (tuple, list))
+                    and when[0] == "inner_round")
+
+        def report(rid, phase):
+            if rid != run_id:
+                return
+            run = self.server.run
+            for cid, when in specs.items():
+                if cid in dead or is_inner(when):
+                    continue          # inner specs fire via boundary hooks
+                if isinstance(when, int):
+                    if current["pass"] >= when:
+                        drop(cid)
+                elif run is not None and phase == when[0] \
+                        and run.round == when[1]:
+                    drop(cid)
+            if on_phase is not None:
+                on_phase(rid, phase)
+
+        def inner_boundary(cid, rnd, stage):
+            if stage != "enter":
+                return
+            if on_phase is not None:
+                on_phase(run_id, "inner_round")
+            when = specs.get(cid)
+            if cid not in dead and is_inner(when) and rnd == when[1]:
+                drop(cid)
+                raise InnerRoundAborted(
+                    f"{cid} dropped at inner-round boundary r{rnd}")
+
+        hooked = [n for n in self.nodes if n.run_id == run_id]
+        for node in hooked:
+            node.inner_hooks.append(inner_boundary)
+        try:
+            for t in range(max_ticks):
+                current["pass"] = t
+                sched.step(on_phase=report)
+                if target_loss is not None and any(
+                        h.get("mean_train_loss", float("inf"))
+                        <= target_loss
+                        for h in self.server.run.history):
+                    return "target_reached"
+                phase = self.server.run.phase
+                if phase in ("done", "paused"):
+                    return phase
+        finally:
+            for node in hooked:
+                node.inner_hooks.remove(inner_boundary)
         raise RuntimeError("run did not converge within tick budget")

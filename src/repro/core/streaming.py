@@ -528,7 +528,8 @@ def stream_reduce_compressed(msgs: Iterable[dict], weights, *,
         if int(m["size"]) != t:
             raise ValueError("compressed updates disagree on buffer size")
         if scheme == "topk":
-            sink = sink or TopkSink(t)
+            if sink is None:
+                sink = TopkSink(t)
             sink.fold(str(i), m["idx"], m["val"], w[i])
         else:
             if sink is None:

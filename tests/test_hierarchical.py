@@ -1,0 +1,394 @@
+"""Hierarchical two-tier federation (DESIGN.md §Hierarchical federation).
+
+Pins the tentpole's contracts: deterministic device cohort/dropout
+sampling, deterministic device shards with label/rate skew, the
+``InnerRoundEngine``'s streaming weighted fold against a stacked numpy
+reference, O(T) fold memory flat in cohort size, the degenerate
+one-device fleet as a *bit-for-bit* twin of the flat silo, end-to-end
+composition with the outer privacy planes, the job-matrix rejections,
+and tier-aware fault injection (``drop_at`` at inner-round boundaries).
+"""
+import numpy as np
+import pytest
+
+from repro.core import Consortium, DataSchema
+from repro.core import protocol
+from repro.core.client import InnerRoundAborted, InnerRoundEngine
+from repro.core.telemetry import Telemetry
+from repro.data import make_silo_datasets
+from repro.data.synthetic import DeviceFleet, make_device_shards
+
+
+# ---------------------------------------------------------------------------
+# sampling determinism
+# ---------------------------------------------------------------------------
+def _check_sampling(silo_id, seed, rnd, n, k, p):
+    c1 = protocol.sample_device_cohort(silo_id, seed, rnd, n, k)
+    c2 = protocol.sample_device_cohort(silo_id, seed, rnd, n, k)
+    assert c1 == c2                       # pure in (silo, seed, round)
+    assert c1 == sorted(set(c1))          # sorted, no duplicates
+    assert all(0 <= d < n for d in c1)
+    assert len(c1) == (n if k <= 0 else min(k, n))
+    d1 = protocol.sample_device_dropout(silo_id, seed, rnd, c1, p)
+    d2 = protocol.sample_device_dropout(silo_id, seed, rnd, c1, p)
+    assert d1 == d2
+    assert set(d1) <= set(c1)
+    assert len(d1) < len(c1)              # never empties the cohort
+
+
+def test_sampling_deterministic_plain():
+    for rnd in range(4):
+        _check_sampling("windco", 7, rnd, 100, 10, 0.5)
+        _check_sampling("solarx", 7, rnd, 16, 0, 0.9)
+        _check_sampling("gridpower", 0, rnd, 3, 3, 0.0)
+
+
+def test_sampling_deterministic_property_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.text(min_size=1, max_size=8), st.integers(0, 2**31),
+           st.integers(0, 5), st.integers(1, 64), st.integers(0, 64),
+           st.floats(0.0, 0.99))
+    def check(silo_id, seed, rnd, n, k, p):
+        _check_sampling(silo_id, seed, rnd, n, min(k, n), p)
+
+    check()
+
+
+def test_cohorts_vary_across_rounds_and_silos():
+    cohorts = [protocol.sample_device_cohort("s", 0, r, 1000, 50)
+               for r in range(4)]
+    assert len({tuple(c) for c in cohorts}) > 1
+    assert (protocol.sample_device_cohort("a", 0, 0, 1000, 50)
+            != protocol.sample_device_cohort("b", 0, 0, 1000, 50))
+
+
+def test_dropout_never_empties_cohort():
+    # p=0.99 over a small cohort: eventually every device draws "drop";
+    # the guard must keep the first sampled device
+    for rnd in range(20):
+        cohort = protocol.sample_device_cohort("s", 1, rnd, 4, 4)
+        dropped = protocol.sample_device_dropout("s", 1, rnd, cohort, 0.99)
+        assert len(dropped) < len(cohort)
+
+
+# ---------------------------------------------------------------------------
+# device shards
+# ---------------------------------------------------------------------------
+def test_device_shards_deterministic_and_skewed():
+    silo = make_silo_datasets(1, vocab=64, seq_len=8, seed=3)[0]
+    f1 = make_device_shards(silo, 32, seed=3)
+    f2 = make_device_shards(silo, 32, seed=3)
+    s1, s2 = f1.shard(5, rnd=2), f2.shard(5, rnd=2)
+    np.testing.assert_array_equal(s1.batch(4)["tokens"],
+                                  s2.batch(4)["tokens"])
+    # profile (distribution + example budget) is fixed across rounds,
+    # the batch stream is not
+    a, b = f1.shard(5, rnd=0), f1.shard(5, rnd=1)
+    np.testing.assert_array_equal(a._probs, b._probs)
+    assert a.n_examples == b.n_examples
+    assert not np.array_equal(a.batch(4)["tokens"], b.batch(4)["tokens"])
+    # rate skew: device sizes genuinely differ across the fleet
+    sizes = {f1.shard(i)._probs.argmax() for i in range(16)}
+    budgets = {f1.shard(i).n_examples for i in range(16)}
+    assert len(budgets) > 1
+    assert len(sizes) >= 1
+    with pytest.raises(IndexError):
+        f1.shard(32)
+
+
+def test_degenerate_fleet_is_the_silo():
+    silo = make_silo_datasets(1, vocab=64, seq_len=8, seed=0)[0]
+    fleet = make_device_shards(silo, 1, seed=0)
+    assert fleet.shard(0) is silo
+
+
+def test_fleet_rejects_probless_silo():
+    class Opaque:
+        silo_id = "x"
+    with pytest.raises(TypeError):
+        DeviceFleet(Opaque(), 4, seed=0)
+    with pytest.raises(ValueError):
+        DeviceFleet(Opaque(), 0, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# inner-round engine: streaming fold vs stacked reference
+# ---------------------------------------------------------------------------
+class _StubShard:
+    def __init__(self, device_index):
+        self.device_index = device_index
+
+
+class _StubFleet:
+    def shard(self, idx, rnd=0):
+        return _StubShard(idx)
+
+
+class _StubNode:
+    """The minimal executor surface the engine drives: a job, a fleet,
+    telemetry, and ``_fit`` — here a fabricated per-device delta so the
+    fold has an exact stacked reference."""
+
+    def __init__(self, job, base):
+        self.job = job
+        self.base = base
+        self.fleet = _StubFleet()
+        self.dataset = _StubShard(0)     # silo_id/seed fall back to defaults
+        self.client_id = "stub-silo"
+        self.run_id = "stub-run"
+        self.telemetry = Telemetry(enabled=False)
+        self.inner_hooks = []
+
+    def device_delta(self, idx):
+        rng = np.random.default_rng(1000 + idx)
+        return {k: rng.normal(size=v.shape).astype(np.float32)
+                for k, v in self.base.items()}
+
+    def device_weight(self, idx):
+        return 1 + (idx % 5)
+
+    def _fit(self, shard, base_params, lr):
+        i = shard.device_index
+        d = self.device_delta(i)
+        params = {k: base_params[k] + d[k] for k in base_params}
+        return params, 0.25 + 0.01 * i, self.device_weight(i)
+
+
+class _StubJob:
+    local_steps = 1
+    batch_size = 1
+
+    def __init__(self, devices, cohort=0, dropout=0.0, clip=0.0):
+        self.devices_per_silo = devices
+        self.device_cohort_size = cohort
+        self.device_dropout = dropout
+        self.device_clip = clip
+
+
+def _reference(node, engine):
+    """Stacked numpy FedAvg over the engine's surviving cohort."""
+    surv = [d for d in engine.cohort if d not in set(engine.dropped)]
+    clip = float(engine.job.device_clip)
+    acc = {k: np.zeros_like(v) for k, v in node.base.items()}
+    wsum = 0.0
+    for i in surv:
+        d, w = node.device_delta(i), float(node.device_weight(i))
+        if clip > 0.0:
+            flat = np.concatenate([v.ravel() for v in d.values()])
+            norm = float(np.linalg.norm(flat))
+            if norm > clip:
+                d = {k: v * np.float32(clip / norm) for k, v in d.items()}
+        for k in acc:
+            acc[k] += w * d[k]
+        wsum += w
+    return {k: node.base[k] + acc[k] / np.float32(wsum)
+            for k in node.base}
+
+
+@pytest.mark.parametrize("clip", [0.0, 0.5])
+def test_engine_fold_matches_stacked_reference(clip):
+    base = {"w": np.linspace(-1, 1, 96, dtype=np.float32).reshape(8, 12),
+            "b": np.zeros(8, np.float32)}
+    node = _StubNode(_StubJob(24, cohort=9, dropout=0.25, clip=clip), base)
+    engine = InnerRoundEngine(node, rnd=1, lr=0.1, base_params=base)
+    params, loss, n = engine.run()
+    assert engine.folded == len(engine.cohort) - len(engine.dropped) > 1
+    assert n == sum(node.device_weight(i) for i in engine.cohort
+                    if i not in set(engine.dropped))
+    ref = _reference(node, engine)
+    for k in base:
+        np.testing.assert_allclose(np.asarray(params[k]), ref[k],
+                                   atol=1e-5)
+    # loss is the example-weighted mean of device losses
+    surv = [i for i in engine.cohort if i not in set(engine.dropped)]
+    wl = sum((0.25 + 0.01 * i) * node.device_weight(i) for i in surv)
+    assert abs(loss - wl / n) < 1e-6
+
+
+def test_single_survivor_shortcut_is_exact():
+    base = {"w": np.arange(12, dtype=np.float32)}
+    node = _StubNode(_StubJob(8, cohort=1), base)
+    engine = InnerRoundEngine(node, rnd=0, lr=0.1, base_params=base)
+    params, loss, n = engine.run()
+    (idx,) = engine.cohort
+    expect, eloss, en = node._fit(_StubShard(idx), base, 0.1)
+    np.testing.assert_array_equal(params["w"], expect["w"])
+    assert (loss, n) == (eloss, en)
+    assert engine.sink is None           # no pack/unpack round trip
+
+
+def test_peak_fold_bytes_flat_in_cohort_size():
+    """O(T) memory: folding 24 devices peaks at the same staged bytes as
+    folding 12 (both past the sink's batch=8 staging cap)."""
+    base = {"w": np.zeros((64, 64), np.float32)}
+    peaks = []
+    for cohort in (12, 24):
+        node = _StubNode(_StubJob(64, cohort=cohort), base)
+        engine = InnerRoundEngine(node, rnd=0, lr=0.1, base_params=base)
+        engine.run()
+        assert engine.folded == cohort
+        peaks.append(engine.peak_fold_bytes)
+    assert peaks[0] > 0
+    assert peaks[1] <= peaks[0] * 1.01
+
+
+# ---------------------------------------------------------------------------
+# consortium-level behaviour
+# ---------------------------------------------------------------------------
+ORGS = ["windco", "solarx", "gridpower"]
+
+
+def _run(extra, n_orgs=2, seed=0, **kw):
+    con = Consortium(ORGS[:n_orgs], seed=seed)
+    schema = DataSchema(vocab=512, seq_len=32)
+    decisions = {"arch": "fedforecast-100m", "rounds": 2, "local_steps": 2,
+                 "batch_size": 2, "lr": 1e-3,
+                 "data_schema": schema.to_dict()}
+    decisions.update(extra)
+    contract = con.negotiate(decisions)
+    job = con.server.job_creator.from_contract(contract)
+    ds = make_silo_datasets(n_orgs, vocab=512, seq_len=32, seed=seed)
+    con.start(job, ds)
+    phase = con.run_to_completion(**kw)
+    return con, phase
+
+
+def _final_global(con):
+    r = con.server.run
+    return con.server.store.get(r.global_digest)
+
+
+def test_degenerate_fleet_is_bit_for_bit_flat_twin():
+    """devices_per_silo=1 + device_cohort_size=1 + dropout=0 goes through
+    the whole inner machinery (fleet, engine, single-survivor shortcut)
+    yet must match the flat run *exactly* — not approximately.
+
+    Runs on the plain (unmasked) plane: secure-agg masks are derived
+    from each consortium's random master key and per-run client ids, so
+    their fp32 add/cancel residue (~1e-6) differs between ANY two runs,
+    flat or not — the masked plane has no bit-for-bit twin to compare
+    against. The masked composition is covered (to tolerance) by
+    test_fleet_e2e_composes_with_secure_int8."""
+    flat, p1 = _run({"secure_aggregation": False})
+    twin, p2 = _run({"secure_aggregation": False, "devices_per_silo": 1,
+                     "device_cohort_size": 1, "device_dropout": 0.0})
+    assert p1 == p2 == "done"
+    assert all(n.fleet is None for n in flat.nodes)
+    assert all(n.fleet is not None for n in twin.nodes)
+    a, b = _final_global(flat), _final_global(twin)
+    import jax
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_fleet_e2e_composes_with_secure_int8():
+    con, phase = _run({"devices_per_silo": 16, "device_cohort_size": 4,
+                       "device_dropout": 0.3, "device_clip": 0.5,
+                       "secure_aggregation": True, "compression": "int8"})
+    assert phase == "done"
+    total_sampled = total_folded = 0
+    for node in con.nodes:
+        recs = node.metadata.query(operation="inner_round")
+        assert len(recs) == 2            # one per outer round
+        for r in recs:
+            d = r["details"]
+            assert d["sampled"] == 4
+            assert d["sampled"] == d["dropped"] + d["folded"]
+            assert d["peak_fold_bytes"] > 0
+            total_sampled += d["sampled"]
+            total_folded += d["folded"]
+    m = con.telemetry.metrics
+    assert m.counter("fleet.inner_rounds").read() == 4
+    assert m.counter("fleet.devices_folded").read() == total_folded
+    assert (m.counter("fleet.devices_dropped").read()
+            == total_sampled - total_folded)
+    assert all(np.isfinite(h["mean_train_loss"])
+               for h in con.server.run.history)
+
+
+def test_job_matrix_rejects_fleet_async_and_bad_shapes():
+    con = Consortium(ORGS[:2], seed=0)
+    creator = con.server.job_creator
+
+    def contract(extra):
+        decisions = {"arch": "fedforecast-100m", "rounds": 1,
+                     "data_schema": None}
+        decisions.update(extra)
+        return con.negotiate(decisions)
+
+    with pytest.raises(ValueError, match="async_buff"):
+        creator.from_contract(contract(
+            {"protocol": "async_buff", "secure_aggregation": False,
+             "devices_per_silo": 8}))
+    rejects = con.server.metadata.query(operation="create_job",
+                                        outcome="rejected")
+    assert rejects and rejects[-1]["details"]["decisions"][
+        "devices_per_silo"] == 8
+    with pytest.raises(ValueError, match="device_cohort_size"):
+        creator.from_contract(contract(
+            {"devices_per_silo": 4, "device_cohort_size": 5}))
+    with pytest.raises(ValueError, match="device_dropout"):
+        creator.from_contract(contract({"devices_per_silo": 4,
+                                        "device_dropout": 1.0}))
+    with pytest.raises(ValueError, match="devices_per_silo"):
+        creator.from_contract(contract({"devices_per_silo": 0}))
+
+
+def test_intra_silo_protocol_not_negotiable():
+    assert "intra_silo" not in protocol.PROTOCOLS
+    with pytest.raises(KeyError):
+        protocol.make_protocol("intra_silo")
+
+
+def test_drop_at_inner_round_boundary_and_on_phase():
+    events = []
+
+    def on_phase(rid, phase):
+        events.append(phase)
+
+    con, phase = _run({"devices_per_silo": 8, "device_cohort_size": 3,
+                       "rounds": 2, "round_deadline_ticks": 3},
+                      n_orgs=3,
+                      drop_at={"solarx": ("inner_round", 1)},
+                      on_phase=on_phase)
+    assert phase == "done"
+    assert events.count("inner_round") >= 3   # all silos entered round 0
+    dropped_cid = con.client_ids["solarx"]
+    by_round = {h["round"]: h for h in con.server.run.history}
+    # solarx contributed to round 0, then vanished at its own round-1
+    # inner boundary — before training, before posting
+    assert dropped_cid in by_round[0]["train_losses"]
+    assert dropped_cid not in by_round[1]["train_losses"]
+    node = next(n for n in con.nodes
+                if n.client_id == dropped_cid)
+    assert len(node.metadata.query(operation="inner_round")) == 1
+
+
+def test_inner_hooks_fire_in_flat_mode_too():
+    seen = []
+    con, phase = _run({}, on_phase=lambda rid, ph: seen.append(ph))
+    assert phase == "done"
+    assert seen.count("inner_round") >= 2     # both flat silos, round 0+
+
+
+def test_inner_hook_abort_raises_before_training():
+    """A boundary hook raising ``InnerRoundAborted`` kills the round
+    before any device trains — in the fleet path the hook fires before
+    the engine even samples its cohort."""
+    base = {"w": np.zeros(4, np.float32)}
+    node = _StubNode(_StubJob(8, cohort=3), base)
+    calls = []
+
+    def hook(cid, rnd, stage):
+        calls.append((cid, rnd, stage))
+        if stage == "enter":
+            raise InnerRoundAborted("test")
+
+    node.inner_hooks.append(hook)
+    from repro.core.client import FLClientNode
+    with pytest.raises(InnerRoundAborted):
+        FLClientNode.run_inner_round(node, base, 0.1, rnd=2)
+    assert calls == [("stub-silo", 2, "enter")]

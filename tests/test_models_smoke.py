@@ -75,7 +75,7 @@ def test_loss_decreases_when_training():
     state = opt.init(params)
     batch = make_batch(cfg, B=4, S=32, seed=3)
     first = None
-    for i in range(8):
+    for _ in range(8):
         params, state, m = step(params, state, batch)  # overfit one batch
         if first is None:
             first = float(m["loss"])

@@ -1,0 +1,55 @@
+"""Guard against the ``x or Ctor()`` default-argument footgun (S1 audit).
+
+``metadata or MetadataStore()`` silently replaces a *falsy but valid*
+argument — an empty shared store, a zero config — with a fresh private
+instance, severing the caller's aliasing. The audit that introduced this
+guard found exactly that bug in ``ClientAgent`` (a shared-but-empty
+``MetadataStore`` was discarded, so agent provenance landed in a store
+nobody read). The correct spelling is an explicit identity check:
+``x = Ctor() if x is None else x``.
+
+This test walks every module under ``src/`` and flags ``or``-expressions
+whose fallback operand constructs a class (a call to a capitalized
+name or attribute), the exact shape of the footgun. Legitimate uses of
+``or`` over plain values (numbers, strings, dict lookups) pass.
+"""
+import ast
+import pathlib
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
+
+
+def _ctor_name(call: ast.AST):
+    if not isinstance(call, ast.Call):
+        return None
+    func = call.func
+    name = None
+    if isinstance(func, ast.Name):
+        name = func.id
+    elif isinstance(func, ast.Attribute):
+        name = func.attr
+    if name and name[0].isupper():
+        return name
+    return None
+
+
+def test_no_or_constructor_defaults_in_src():
+    offenders = []
+    for path in sorted(SRC.rglob("*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.BoolOp)
+                    and isinstance(node.op, ast.Or)):
+                continue
+            # the first operand is the guarded value; any *later* operand
+            # that constructs a class is a swallowed-falsy-value default
+            for value in node.values[1:]:
+                name = _ctor_name(value)
+                if name:
+                    offenders.append(
+                        f"{path.relative_to(SRC)}:{node.lineno} "
+                        f"`... or {name}(...)`")
+    assert not offenders, (
+        "replace `x or Ctor()` with `Ctor() if x is None else x` "
+        "(falsy-but-valid arguments are silently discarded):\n  "
+        + "\n  ".join(offenders))
